@@ -1,0 +1,113 @@
+"""§Roofline: the three-term roofline per (arch x shape x mesh).
+
+    compute_s    = HLO_FLOPs / (chips x 197e12)
+                   [loop-corrected dot FLOPs parsed from compiled.as_text();
+                    XLA cost_analysis counts scan bodies once]
+    memory_s     = analytic HBM traffic / (chips x 819e9)
+                   [documented op census in repro.core.roofline; the
+                    HLO-parsed op-boundary traffic is kept as a diagnostic
+                    UPPER BOUND — on the CPU backend XLA's fusion boundaries
+                    and f32 staging over-count HBM round trips 10-50x vs a
+                    TPU memory hierarchy]
+    collective_s = wire bytes / link_bw
+                   [parsed per-op from the partitioned HLO: operand bytes x
+                    ring factor x loop trip counts — this is REAL program
+                    structure, the term the perf loop attacks]
+
+MODEL_FLOPS = 6 N_active D (train) / 2 N_active D (prefill/decode); the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs catches remat + dense-schedule
+waste.  roofline_fraction = MODEL_FLOPS-at-peak / step_time.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import REGISTRY, SHAPES
+from repro.core.roofline import HW, Resources, terms_for
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def _resources(rec: dict) -> Resources:
+    ms = rec.get("mesh_shape") or {}
+    return Resources(pods=ms.get("pod", 1), dp=ms.get("data", 16),
+                     tp=ms.get("model", 16), microbatch=1)
+
+
+def cell_terms(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = REGISTRY[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    h = rec["hlo"]
+    flops_dev = h["dot_flops_per_device"]
+    compute_s = flops_dev / HW["peak_flops"]
+    analytic = terms_for(cfg, shape, _resources(rec))
+    memory_s = analytic.memory_s
+    hlo_memory_s = h["traffic_bytes_per_device"] / HW["hbm_bw"]
+    collective_s = h["wire_bytes_per_device"] / HW["link_bw"]
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+    else:
+        model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+    total = compute_s + memory_s + collective_s
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    useful = model_flops / max(flops_dev * chips, 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "step_s": total,
+        "hlo_memory_s_upper": hlo_memory_s,
+        "bottleneck": max(terms, key=terms.get),
+        "model_flops": model_flops,
+        "hlo_flops_total": flops_dev * chips,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": (model_flops / (chips * HW["peak_flops"])) /
+        total if total > 0 else 0.0,
+        "plan_overrides": rec.get("plan_overrides") or {},
+    }
+
+
+def load_cells(mesh: str = "single", include_overrides: bool = False,
+               art: Path = ART) -> List[dict]:
+    out = []
+    for f in sorted(art.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("mesh") != mesh:
+            continue
+        if not include_overrides and rec.get("plan_overrides"):
+            continue
+        if include_overrides == "only" and not rec.get("plan_overrides"):
+            continue
+        t = cell_terms(rec)
+        if t:
+            out.append(t)
+    return out
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    for t in load_cells("single"):
+        name = f"roofline.{t['arch']}.{t['shape']}"
+        rows.append((
+            name, t["step_s"] * 1e3,
+            f"bottleneck={t['bottleneck']} "
+            f"C/M/N={t['compute_s']*1e3:.1f}/{t['memory_s']*1e3:.1f}/"
+            f"{t['collective_s']*1e3:.1f}ms "
+            f"useful={t['useful_flops_ratio']:.2f} "
+            f"roofline_frac={t['roofline_fraction']:.3f}"))
+    # skipped cells for completeness
+    for f in sorted(ART.glob("*__single.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "skipped":
+            rows.append((f"roofline.{rec['arch']}.{rec['shape']}", -1.0,
+                         f"SKIPPED: {rec['reason'][:60]}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Benchmark harness: one function per paper table/figure + the roofline
+table.  Prints ``name,us_per_call,derived`` CSV and archives JSON.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig13      # substring filter
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def main() -> None:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    from benchmarks import paper_figs, roofline_table, tpu_planner
+
+    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    fns = list(paper_figs.ALL) + [roofline_table.run, tpu_planner.run]
+    all_rows = []
+    print("name,us_per_call,derived")
+    for fn in fns:
+        label = f"{fn.__module__.split('.')[-1]}.{fn.__name__}"
+        if pattern and pattern not in label:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+            us = (time.perf_counter() - t0) * 1e6
+            for name, value, derived in rows:
+                print(f"{name},{value:.6g},{derived}")
+                all_rows.append({"name": name, "value": value,
+                                 "derived": derived})
+            print(f"{label}._total,{us:.0f},bench wall time (us)")
+        except Exception as e:  # keep the harness running
+            traceback.print_exc()
+            print(f"{label}.ERROR,-1,{type(e).__name__}: {e}")
+            all_rows.append({"name": label, "value": -1,
+                             "derived": f"ERROR {e}"})
+    out = Path(__file__).resolve().parent.parent / "artifacts"
+    out.mkdir(exist_ok=True)
+    (out / "bench_results.json").write_text(json.dumps(all_rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Fault-tolerance demo: train, crash mid-run, adaptive-RAQO replan, resume.
+
+    PYTHONPATH=src python examples/elastic_train.py
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.elastic", "--arch",
+         "smollm-360m", "--smoke", "--steps", "30", "--max-restarts", "2",
+         "--ckpt-dir", "/tmp/repro_elastic_demo", "--",
+         "--fail-at", "15", "--batch", "4", "--seq", "64",
+         "--ckpt-every", "5", "--log-every", "10"],
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+        cwd=ROOT))

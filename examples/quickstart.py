@@ -1,0 +1,44 @@
+"""Quickstart: train a reduced smollm on CPU for a few hundred steps and
+watch the loss drop; checkpoints land in /tmp/repro_quickstart.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticPipeline
+from repro.models import build_model
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime.steps import init_train_state, make_train_step
+
+
+def main():
+    cfg = get_config("smollm-360m").smoke()
+    model = build_model(cfg)
+    steps, batch_size, seq = 200, 8, 128
+    opt = AdamW(lr=cosine_schedule(3e-3, 20, steps))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    pipe = SyntheticPipeline(cfg, batch_size, seq, seed=0)
+    ckpt = CheckpointManager("/tmp/repro_quickstart", keep=2)
+
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % 20 == 0:
+            print(f"step {step+1:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"lr {float(metrics['lr']):.2e}")
+        if (step + 1) % 100 == 0:
+            ckpt.save(step + 1, state, extras={"data_step": step + 1})
+    print("done — checkpoints:", ckpt.steps())
+
+
+if __name__ == "__main__":
+    main()

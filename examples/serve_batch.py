@@ -1,0 +1,17 @@
+"""Batched serving example: continuous-batching slots over a tiny model.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "smollm-360m",
+         "--smoke", "--requests", "8", "--slots", "4", "--prompt-len", "12",
+         "--max-new", "16"],
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+        cwd=ROOT))

@@ -1,0 +1,127 @@
+"""Fault-tolerant checkpointing with resharding restore.
+
+Layout per step:  <dir>/step_<n>/{manifest.json, arrays.npz}  written to a
+tmp dir first and atomically renamed (a crash mid-save never corrupts the
+latest checkpoint).  ``keep`` bounds disk; ``save_async`` offloads the host
+write to a thread (the device-to-host copy is synchronous, the disk write
+is not).
+
+Restore accepts a *different* mesh/sharding than the save: every leaf is
+re-placed with ``jax.device_put(leaf, NamedSharding(new_mesh, new_spec))``
+— this is the elastic-restart path (adaptive RAQO replans the layout after
+losing chips, then restores into the new layout).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, state: Any, extras: Optional[dict] = None,
+             async_: bool = False) -> Path:
+        leaves, treedef = _flatten(state)
+        host_leaves = [np.asarray(l) for l in leaves]   # device->host now
+        if async_:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_leaves, extras),
+                daemon=True)
+            self._thread.start()
+            return self.dir / f"step_{step}"
+        return self._write(step, host_leaves, extras)
+
+    def _write(self, step: int, host_leaves, extras) -> Path:
+        final = self.dir / f"step_{step}"
+        tmp = self.dir / f".tmp_step_{step}_{os.getpid()}_{time.time_ns()}"
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz",
+                 **{f"leaf_{i}": l for i, l in enumerate(host_leaves)})
+        manifest = {
+            "step": step,
+            "n_leaves": len(host_leaves),
+            "shapes": [list(l.shape) for l in host_leaves],
+            "dtypes": [str(l.dtype) for l in host_leaves],
+            "extras": extras or {},
+            "time": time.time(),
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)                       # atomic publish
+        self._gc()
+        return final
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                mesh=None, specs=None) -> tuple[Any, dict]:
+        """Restore into the structure of ``target``.  With (mesh, specs)
+        every leaf is resharded onto the new layout."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        data = np.load(path / "arrays.npz")
+        leaves, treedef = _flatten(target)
+        if len(leaves) != manifest["n_leaves"]:
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, target has "
+                f"{len(leaves)} — architecture mismatch")
+        new_leaves = []
+        spec_leaves = None
+        if specs is not None:
+            spec_leaves = jax.tree_util.tree_flatten(
+                specs, is_leaf=lambda x: isinstance(
+                    x, jax.sharding.PartitionSpec))[0]
+        for i, tgt in enumerate(leaves):
+            arr = data[f"leaf_{i}"]
+            if hasattr(tgt, "dtype"):
+                arr = arr.astype(tgt.dtype)
+            if mesh is not None and spec_leaves is not None:
+                sh = jax.sharding.NamedSharding(mesh, spec_leaves[i])
+                new_leaves.append(jax.device_put(arr, sh))
+            else:
+                new_leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), \
+            manifest["extras"]

@@ -1,0 +1,21 @@
+"""RAQO — the paper's primary contribution: joint Resource And Query
+Optimization (cost models, Algorithm-1 hill climbing, resource-plan cache,
+Selinger + FastRandomized planners, rule-based decision trees), plus its
+TPU transfer (roofline cost model + sharding planner).
+"""
+from repro.core.cluster import (ClusterConditions, PlanningStats,  # noqa: F401
+                                ResourceDim, paper_cluster, scaled_cluster)
+from repro.core.cost_model import (HiveSimulator, RegressionModel,  # noqa: F401
+                                   SimulatorCostModel, monetary_cost,
+                                   paper_models, simulator_cost_models,
+                                   simulator_models)
+from repro.core.hillclimb import brute_force, hill_climb  # noqa: F401
+from repro.core.plan_cache import ResourcePlanCache  # noqa: F401
+from repro.core.plans import IMPLS, OperatorCosting, PlanNode  # noqa: F401
+from repro.core.raqo import RAQO, JointPlan  # noqa: F401
+from repro.core.schema import (Schema, TPCH_QUERIES, random_query,  # noqa: F401
+                               random_schema, tpch_schema)
+from repro.core.selinger import exhaustive_left_deep, selinger_plan  # noqa: F401
+from repro.core.fast_randomized import fast_randomized_plan  # noqa: F401
+from repro.core.decision_tree import (DecisionTree, default_hive_rule,  # noqa: F401
+                                      default_spark_rule, train_raqo_tree)

@@ -1,0 +1,165 @@
+"""Fast randomized multi-objective query planner, re-implemented after
+Trummer & Koch, "A Fast Randomized Algorithm for Multi-Objective Query
+Optimization" (SIGMOD'16) [14], with the associativity and exchange
+mutations of Steinbrunn et al. [36].
+
+The planner keeps an approximate Pareto frontier over cost vectors
+(execution time, monetary cost) with target approximation precision
+``eps``: a plan is kept only if no archived plan (1+eps)-dominates it.
+RAQO integration is identical to Selinger's — every join operator is costed
+through OperatorCosting, which performs resource planning per §VI-C.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.plans import (IMPLS, OperatorCosting, PlanNode, has_edge,
+                              leaf)
+from repro.core.schema import Schema
+
+CostVec = Tuple[float, float]     # (time s, money $)
+
+
+def cost_vec(p: PlanNode) -> CostVec:
+    return (p.total_cost, p.total_money)
+
+
+def dominates(a: CostVec, b: CostVec, eps: float = 0.0) -> bool:
+    """a (1+eps)-dominates b."""
+    return all(x <= (1 + eps) * y for x, y in zip(a, b)) and a != b
+
+
+@dataclasses.dataclass
+class ParetoArchive:
+    eps: float = 0.05
+    plans: List[PlanNode] = dataclasses.field(default_factory=list)
+
+    def offer(self, p: PlanNode) -> bool:
+        v = cost_vec(p)
+        for q in self.plans:
+            if dominates(cost_vec(q), v, self.eps):
+                return False
+        self.plans = [q for q in self.plans
+                      if not dominates(v, cost_vec(q), 0.0)]
+        self.plans.append(p)
+        return True
+
+    def best(self, objective: int = 0) -> Optional[PlanNode]:
+        if not self.plans:
+            return None
+        return min(self.plans, key=lambda p: cost_vec(p)[objective])
+
+
+# ------------------------- random plan generation -------------------------- #
+
+def random_bushy_plan(schema: Schema, tables: Sequence[str],
+                      costing: OperatorCosting, rng: random.Random,
+                      impls: Sequence[str] = IMPLS) -> Optional[PlanNode]:
+    forest = [leaf(schema, t) for t in tables]
+    guard = 0
+    while len(forest) > 1:
+        guard += 1
+        if guard > 10_000:
+            return None
+        i, j = rng.sample(range(len(forest)), 2)
+        if not has_edge(schema, forest[i], forest[j]):
+            continue
+        a = forest.pop(max(i, j))
+        b = forest.pop(min(i, j))
+        forest.append(costing.best_join(schema, a, b, impls))
+    return forest[0]
+
+
+# ------------------------------ mutations ---------------------------------- #
+
+def _collect_joins(p: PlanNode, acc: List[PlanNode]) -> None:
+    if not p.is_leaf:
+        acc.append(p)
+        _collect_joins(p.left, acc)
+        _collect_joins(p.right, acc)
+
+
+def _rebuild(schema: Schema, node: PlanNode, costing: OperatorCosting,
+             target: PlanNode, replacement: Optional[PlanNode],
+             impls: Sequence[str]) -> Optional[PlanNode]:
+    """Rebuild the tree bottom-up, swapping ``target`` for ``replacement``."""
+    if node is target:
+        return replacement
+    if node.is_leaf:
+        return node
+    l = _rebuild(schema, node.left, costing, target, replacement, impls)
+    r = _rebuild(schema, node.right, costing, target, replacement, impls)
+    if l is None or r is None:
+        return None
+    if l is node.left and r is node.right:
+        return node                      # untouched subtree: keep costs
+    return costing.best_join(schema, l, r, impls)
+
+
+def mutate(schema: Schema, plan: PlanNode, costing: OperatorCosting,
+           rng: random.Random, impls: Sequence[str] = IMPLS
+           ) -> Optional[PlanNode]:
+    """One random mutation: commutativity, associativity, or exchange."""
+    joins: List[PlanNode] = []
+    _collect_joins(plan, joins)
+    if not joins:
+        return None
+    node = rng.choice(joins)
+    kind = rng.choice(("commute", "assoc", "exchange"))
+    repl: Optional[PlanNode] = None
+    if kind == "commute":
+        repl = costing.best_join(schema, node.right, node.left, impls)
+    elif kind == "assoc" and not node.left.is_leaf:
+        # (A |><| B) |><| C  ->  A |><| (B |><| C)
+        a, b, c = node.left.left, node.left.right, node.right
+        if has_edge(schema, b, c):
+            bc = costing.best_join(schema, b, c, impls)
+            if has_edge(schema, a, bc):
+                repl = costing.best_join(schema, a, bc, impls)
+    elif kind == "exchange" and not node.left.is_leaf:
+        # (A |><| B) |><| C  ->  (A |><| C) |><| B
+        a, b, c = node.left.left, node.left.right, node.right
+        if has_edge(schema, a, c):
+            ac = costing.best_join(schema, a, c, impls)
+            if has_edge(schema, ac, b):
+                repl = costing.best_join(schema, ac, b, impls)
+    if repl is None:
+        return None
+    return _rebuild(schema, plan, costing, node, repl, impls)
+
+
+# ------------------------------ the planner -------------------------------- #
+
+def fast_randomized_plan(schema: Schema, tables: Sequence[str],
+                         costing: OperatorCosting, *,
+                         iterations: int = 10, population: int = 4,
+                         eps: float = 0.05, seed: int = 0,
+                         impls: Sequence[str] = IMPLS
+                         ) -> Tuple[Optional[PlanNode], ParetoArchive]:
+    """Returns (best-time plan, Pareto archive over (time, money))."""
+    rng = random.Random(seed)
+    archive = ParetoArchive(eps=eps)
+    pop: List[PlanNode] = []
+    for _ in range(population * 3):
+        p = random_bushy_plan(schema, tables, costing, rng, impls)
+        if p is not None:
+            pop.append(p)
+            archive.offer(p)
+        if len(pop) >= population:
+            break
+    if not pop:
+        return None, archive
+    for _ in range(iterations):
+        nxt: List[PlanNode] = []
+        for p in pop:
+            q = mutate(schema, p, costing, rng, impls)
+            if q is not None:
+                archive.offer(q)
+                # hill-climb move on scalar objective, keep diversity via archive
+                nxt.append(q if q.total_cost < p.total_cost else p)
+            else:
+                nxt.append(p)
+        pop = nxt
+    return archive.best(0), archive

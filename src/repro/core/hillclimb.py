@@ -1,0 +1,95 @@
+"""Algorithm 1 (paper §VI-B2): hill-climbing resource planning — verbatim.
+
+Generic over resource dimensions: the paper climbs (num_containers,
+container_gb); the TPU sharding planner climbs (model degree, data degree,
+pods, microbatch) with the *same* function.
+
+The pseudocode's ``best = i`` on line 17 is a typo for ``best = j`` (the
+candidate index); we implement the corrected version.  ``candidate`` is
+[-1, +1]: one backward and one forward step per dimension, exactly as
+initialized on line 2 of the paper's listing.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.cluster import ClusterConditions, PlanningStats
+
+CANDIDATE_STEPS = (-1, 1)
+
+
+def get_discrete_steps(cluster: ClusterConditions) -> List[int]:
+    """GetDiscreteSteps(clusterCond): one grid step per dimension."""
+    return [d.step if not d.values else 1 for d in cluster.dims]
+
+
+def _apply_step(dim, value: int, direction: int) -> Optional[int]:
+    """Step one unit along a dim; for explicit-grid dims move to the
+    neighboring grid entry."""
+    if dim.values:
+        idx = dim.values.index(value) + direction
+        if 0 <= idx < len(dim.values):
+            return dim.values[idx]
+        return None
+    v = value + direction * dim.step
+    if dim.lo <= v <= dim.hi:
+        return v
+    return None
+
+
+def hill_climb(cost_fn: Callable[[Tuple[int, ...]], float],
+               cluster: ClusterConditions,
+               start: Optional[Sequence[int]] = None,
+               stats: Optional[PlanningStats] = None,
+               max_iters: int = 100_000
+               ) -> Tuple[Tuple[int, ...], float]:
+    """HillClimbResourcePlanning(m, p, start, clusterCond).
+
+    Starts from the smallest resource configuration (paper: "users want to
+    minimize the resources used ... start from the smallest resource
+    configuration and climb") unless ``start`` is given.  Returns
+    (resources, cost)."""
+    stats = stats if stats is not None else PlanningStats()
+    curr = list(start if start is not None else cluster.min_config())
+
+    def cost(cfg) -> float:
+        stats.configs_explored += 1
+        return cost_fn(tuple(cfg))
+
+    for _ in range(max_iters):
+        curr_cost = cost(curr)
+        best_cost = curr_cost
+        for i, dim in enumerate(cluster.dims):               # each resource dim
+            best_j = -1
+            saved = curr[i]
+            for j, cand in enumerate(CANDIDATE_STEPS):
+                stepped = _apply_step(dim, saved, cand)
+                if stepped is None:                          # exceeds cluster
+                    continue
+                curr[i] = stepped
+                temp = cost(curr)
+                curr[i] = saved                              # backtrack
+                if temp < best_cost:
+                    best_cost = temp
+                    best_j = j
+            if best_j != -1:                                 # re-apply best step
+                curr[i] = _apply_step(dim, saved, CANDIDATE_STEPS[best_j])
+        if best_cost >= curr_cost:
+            # no better neighbors exist -> local optimum
+            return tuple(curr), curr_cost
+    return tuple(curr), cost(curr)
+
+
+def brute_force(cost_fn: Callable[[Tuple[int, ...]], float],
+                cluster: ClusterConditions,
+                stats: Optional[PlanningStats] = None
+                ) -> Tuple[Tuple[int, ...], float]:
+    """Exhaustive search over the resource grid (paper §VI-B1)."""
+    stats = stats if stats is not None else PlanningStats()
+    best, best_cost = None, float("inf")
+    for cfg in cluster.all_configs():
+        stats.configs_explored += 1
+        c = cost_fn(cfg)
+        if c < best_cost:
+            best, best_cost = cfg, c
+    return best, best_cost

@@ -1,0 +1,155 @@
+"""Query-plan trees, cardinality estimation, and joint operator costing.
+
+``OperatorCosting`` is the §VI-C integration point: ``op_cost`` extends the
+query planner's getPlanCost with per-operator *resource planning* (brute
+force, Algorithm-1 hill climbing, or a fixed configuration), optionally
+backed by the resource-plan cache.  Each join operator plans its resources
+independently (paper §VI-B assumption: operators sit at shuffle
+boundaries).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, FrozenSet, Optional, Sequence, Tuple
+
+from repro.core.cluster import ClusterConditions, PlanningStats
+from repro.core.cost_model import (HiveSimulator, RegressionModel,
+                                   monetary_cost)
+from repro.core.hillclimb import brute_force, hill_climb
+from repro.core.plan_cache import ResourcePlanCache
+from repro.core.schema import Schema
+
+GB = 1 << 30
+IMPLS = ("SMJ", "BHJ")
+
+
+# ------------------------------- plan trees -------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class PlanNode:
+    tables: FrozenSet[str]
+    rows: float
+    row_bytes: float
+    # join-only fields
+    left: Optional["PlanNode"] = None
+    right: Optional["PlanNode"] = None
+    impl: Optional[str] = None
+    resources: Optional[Tuple[int, ...]] = None
+    op_cost: float = 0.0
+    total_cost: float = 0.0           # sum of op costs in the subtree
+    total_money: float = 0.0
+
+    @property
+    def size_gb(self) -> float:
+        return self.rows * self.row_bytes / GB
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.left is None
+
+    def describe(self, indent: int = 0) -> str:
+        pad = "  " * indent
+        if self.is_leaf:
+            return f"{pad}{next(iter(self.tables))} ({self.size_gb:.3f} GB)"
+        r = f" r={self.resources}" if self.resources else ""
+        s = (f"{pad}{self.impl}{r} cost={self.op_cost:.2f}s "
+             f"total={self.total_cost:.2f}s out={self.size_gb:.3f}GB\n")
+        return s + self.left.describe(indent + 1) + "\n" + \
+            self.right.describe(indent + 1)
+
+
+def leaf(schema: Schema, table: str) -> PlanNode:
+    r = schema.relations[table]
+    return PlanNode(tables=frozenset({table}), rows=float(r.rows),
+                    row_bytes=float(r.row_bytes))
+
+
+def join_cardinality(schema: Schema, l: PlanNode, r: PlanNode
+                     ) -> Tuple[float, float]:
+    """Rows/row_bytes of l |><| r: product of crossing-edge selectivities."""
+    em = schema.edge_map()
+    sel = 1.0
+    found = False
+    for a in l.tables:
+        for b in r.tables:
+            s = em.get(frozenset((a, b)))
+            if s is not None:
+                sel *= s
+                found = True
+    if not found:
+        sel = 1.0          # cross join (planners avoid these when possible)
+    return l.rows * r.rows * sel, l.row_bytes + r.row_bytes
+
+
+def has_edge(schema: Schema, l: PlanNode, r: PlanNode) -> bool:
+    em = schema.edge_map()
+    return any(frozenset((a, b)) in em for a in l.tables for b in r.tables)
+
+
+# ------------------------------ costing ------------------------------------ #
+
+@dataclasses.dataclass
+class OperatorCosting:
+    """Joint query+resource costing of a single join operator."""
+    models: Dict[str, RegressionModel]
+    cluster: ClusterConditions
+    resource_planning: str = "hillclimb"     # hillclimb | brute | fixed
+    fixed_resources: Tuple[int, ...] = (10, 4)
+    cache: Optional[ResourcePlanCache] = None
+    cache_key_round: float = 0.01            # GB rounding of data-char key
+    objective: str = "time"                  # time | money
+    stats: PlanningStats = dataclasses.field(default_factory=PlanningStats)
+
+    def _op_cost_at(self, impl: str, ss: float, ls: float,
+                    res: Tuple[int, ...]) -> float:
+        nc, cs = res
+        t = self.models[impl].cost(ss, cs, nc, ls=ls)
+        self.stats.cost_calls += 1
+        if not math.isfinite(t):
+            return math.inf
+        if self.objective == "money":
+            return monetary_cost(t, cs, nc)
+        return t
+
+    def plan_resources(self, impl: str, ss: float, ls: float
+                       ) -> Tuple[Tuple[int, ...], float]:
+        """Resource planning for one operator (cache -> hill climb)."""
+        key = round(ss, 6)
+        if self.cache is not None:
+            hit = self.cache.lookup(impl, "join", key, self.cluster,
+                                    self.stats)
+            if hit is not None:
+                return hit, self._op_cost_at(impl, ss, ls, hit)
+        fn = lambda res: self._op_cost_at(impl, ss, ls, res)   # noqa: E731
+        if self.resource_planning == "fixed":
+            res, cost = self.fixed_resources, fn(self.fixed_resources)
+            self.stats.configs_explored += 1
+        elif self.resource_planning == "brute":
+            res, cost = brute_force(fn, self.cluster, self.stats)
+        else:
+            res, cost = hill_climb(fn, self.cluster, stats=self.stats)
+        if self.cache is not None and math.isfinite(cost):
+            self.cache.insert(impl, "join", key, res)
+        return res, cost
+
+    def best_join(self, schema: Schema, l: PlanNode, r: PlanNode,
+                  impls: Sequence[str] = IMPLS) -> PlanNode:
+        """Join l and r with the best (impl, resources) pair."""
+        rows, rb = join_cardinality(schema, l, r)
+        ss = min(l.size_gb, r.size_gb)
+        ls = max(l.size_gb, r.size_gb)
+        best = None
+        for impl in impls:
+            res, cost = self.plan_resources(impl, ss, ls)
+            if best is None or cost < best[1]:
+                best = (impl, cost, res)
+        impl, cost, res = best
+        nc, cs = res
+        t = self.models[impl].cost(ss, cs, nc, ls=ls)
+        money = monetary_cost(t, cs, nc) if math.isfinite(t) else math.inf
+        return PlanNode(
+            tables=l.tables | r.tables, rows=rows, row_bytes=rb,
+            left=l, right=r, impl=impl, resources=res, op_cost=cost,
+            total_cost=l.total_cost + r.total_cost + cost,
+            total_money=l.total_money + r.total_money + money)

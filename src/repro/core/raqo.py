@@ -1,0 +1,142 @@
+"""RAQO facade (paper §IV): the four optimizer modes.
+
+    r => p       plan_for_resources   : best plan for a fixed resource budget
+    p => (r, c)  resources_for_plan   : cheapest resources meeting a target
+    => (p, r)    joint                : best joint query+resource plan
+    c => (p, r)  for_budget           : best performance under a $ budget
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.cluster import ClusterConditions, PlanningStats, paper_cluster
+from repro.core.cost_model import RegressionModel, monetary_cost, paper_models
+from repro.core.fast_randomized import fast_randomized_plan
+from repro.core.plan_cache import ResourcePlanCache
+from repro.core.plans import IMPLS, OperatorCosting, PlanNode
+from repro.core.schema import Schema
+from repro.core.selinger import selinger_plan
+
+
+@dataclasses.dataclass
+class JointPlan:
+    plan: PlanNode
+    exec_time: float
+    money: float
+    planner_seconds: float
+    stats: PlanningStats
+
+    def operator_resources(self):
+        out = []
+
+        def walk(n: PlanNode):
+            if n.is_leaf:
+                return
+            out.append((n.impl, n.resources, n.op_cost))
+            walk(n.left)
+            walk(n.right)
+        walk(self.plan)
+        return out
+
+
+@dataclasses.dataclass
+class RAQO:
+    schema: Schema
+    models: Dict[str, RegressionModel] = dataclasses.field(
+        default_factory=paper_models)
+    cluster: ClusterConditions = dataclasses.field(
+        default_factory=paper_cluster)
+    planner: str = "selinger"                 # selinger | fastrandomized
+    resource_planning: str = "hillclimb"      # hillclimb | brute | fixed
+    cache: Optional[ResourcePlanCache] = None
+    seed: int = 0
+
+    def _costing(self, objective: str = "time",
+                 fixed: Optional[Tuple[int, ...]] = None) -> OperatorCosting:
+        return OperatorCosting(
+            models=self.models, cluster=self.cluster,
+            resource_planning="fixed" if fixed else self.resource_planning,
+            fixed_resources=fixed or (10, 4), cache=self.cache,
+            objective=objective)
+
+    def _plan(self, tables: Sequence[str], costing: OperatorCosting
+              ) -> Optional[PlanNode]:
+        if self.planner == "selinger":
+            return selinger_plan(self.schema, tables, costing)
+        best, _ = fast_randomized_plan(self.schema, tables, costing,
+                                       seed=self.seed)
+        return best
+
+    def _wrap(self, plan: PlanNode, t0: float,
+              costing: OperatorCosting) -> JointPlan:
+        return JointPlan(plan=plan, exec_time=plan.total_cost,
+                         money=plan.total_money,
+                         planner_seconds=time.perf_counter() - t0,
+                         stats=costing.stats)
+
+    # --------------------------- the four modes ------------------------- #
+    def joint(self, tables: Sequence[str], objective: str = "time"
+              ) -> JointPlan:
+        """=> (p, r)"""
+        t0 = time.perf_counter()
+        costing = self._costing(objective)
+        plan = self._plan(tables, costing)
+        return self._wrap(plan, t0, costing)
+
+    def plan_for_resources(self, tables: Sequence[str],
+                           resources: Tuple[int, ...]) -> JointPlan:
+        """r => p : resources fixed (e.g. tenant quota), optimize the plan."""
+        t0 = time.perf_counter()
+        costing = self._costing("time", fixed=resources)
+        plan = self._plan(tables, costing)
+        return self._wrap(plan, t0, costing)
+
+    def resources_for_plan(self, plan: PlanNode, target_time: float
+                           ) -> Tuple[Optional[Tuple[int, ...]], float]:
+        """p => (r, c) : cheapest money whose predicted time <= target.
+        Resources are re-planned per operator minimizing $ subject to the
+        SLA; returns (per-op resources of the root op, total money)."""
+        costing = self._costing("money")
+        total_money = 0.0
+        root_res = None
+
+        def walk(n: PlanNode):
+            nonlocal total_money, root_res
+            if n.is_leaf:
+                return
+            walk(n.left)
+            walk(n.right)
+            ss = min(n.left.size_gb, n.right.size_gb)
+            ls = max(n.left.size_gb, n.right.size_gb)
+            best = None
+            for res in self.cluster.all_configs():
+                nc, cs = res
+                t = self.models[n.impl].cost(ss, cs, nc)
+                if t <= target_time:
+                    m = monetary_cost(t, cs, nc)
+                    if best is None or m < best[1]:
+                        best = (res, m)
+            if best is not None:
+                total_money += best[1]
+                root_res = best[0]
+        walk(plan)
+        return root_res, total_money
+
+    def for_budget(self, tables: Sequence[str], budget: float) -> JointPlan:
+        """c => (p, r) : best time among joint plans within a $ budget.
+        Optimize for money first; if under budget, re-optimize for time and
+        take the better feasible plan."""
+        t0 = time.perf_counter()
+        costing_m = self._costing("money")
+        plan_m = self._plan(tables, costing_m)
+        costing_t = self._costing("time")
+        plan_t = self._plan(tables, costing_t)
+        pick = None
+        for p in (plan_t, plan_m):
+            if p is not None and p.total_money <= budget:
+                if pick is None or p.total_cost < pick.total_cost:
+                    pick = p
+        pick = pick or plan_m                # over budget: cheapest available
+        return self._wrap(pick, t0, costing_m)

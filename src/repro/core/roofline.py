@@ -1,0 +1,309 @@
+"""Three-term roofline cost model for (arch x shape x plan x resources).
+
+This is the TPU instantiation of the paper's cost model f(d, r) -> C: the
+"data characteristics" are the architecture + input shape, the "resources"
+are (pods, data degree, tensor degree, microbatch), and the cost is the
+max/sum of three roofline terms:
+
+    compute_s    = FLOPs / (chips * peak_FLOPs)
+    memory_s     = HBM traffic / (chips * hbm_bw)
+    collective_s = wire bytes / (chips * link_bw)
+
+Formulas are an explicit op census (documented approximations, not magic
+constants); the dry-run's loop-corrected HLO stats cross-validate them for
+the hill-climbed cells (EXPERIMENTS.md §Roofline).
+
+Hardware constants: TPU v5e-like target per the task sheet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+HW = {
+    "peak_flops": 197e12,      # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,           # B/s per chip
+    "link_bw": 50e9,           # B/s per ICI link
+    "hbm_bytes": 16e9,         # HBM capacity per chip (v5e)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Resources:
+    """The TPU 'resource configuration' (paper: container size x count)."""
+    pods: int = 1
+    dp: int = 16               # data-parallel degree within pod
+    tp: int = 16               # model/tensor degree
+    microbatch: int = 1
+
+    @property
+    def chips(self) -> int:
+        return self.pods * self.dp * self.tp
+
+    def as_tuple(self) -> Tuple[int, int, int, int]:
+        return (self.pods, self.dp, self.tp, self.microbatch)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    traffic_per_chip: float
+    wire_per_chip: float
+    hbm_per_chip: float
+    feasible: bool
+    model_flops: float                 # 6*N*D (train) / 2*N*B (decode)
+    notes: str = ""
+
+    @property
+    def step_s(self) -> float:
+        # no overlap assumption for the baseline: sum of terms.  The perf
+        # pass examines overlap separately.
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved (MFU-like)."""
+        if self.step_s <= 0:
+            return 0.0
+        return self.compute_s / self.step_s
+
+
+def _attn_seq_factor(cfg: ModelConfig, S: int, schedule: str) -> float:
+    """Effective kv length per query position."""
+    if cfg.family == "ssm":
+        return 0.0
+    if cfg.attention == "swa":
+        return min(cfg.window, S)
+    if cfg.attention == "local_global":
+        local = min(cfg.window, S)
+        full = S if schedule == "dense" else S / 2
+        return 0.5 * local + 0.5 * full
+    return S if schedule == "dense" else S / 2
+
+
+def train_terms(cfg: ModelConfig, shape: ShapeConfig, r: Resources, *,
+                schedule: str = "dense", remat: bool = True,
+                fsdp: bool = True, seq_shard: bool = True,
+                hw: Dict[str, float] = HW) -> RooflineTerms:
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    N = cfg.param_count()
+    Na = cfg.active_param_count()
+    chips = r.chips
+    dp_total = r.pods * r.dp
+    tp = r.tp
+    notes = []
+
+    # ---------------- FLOPs ----------------
+    matmul = (8.0 if remat else 6.0) * Na * tokens     # fwd(2)+remat(2)+bwd(4)
+    f_attn = 0.0
+    if cfg.has_attention:
+        kv_eff = _attn_seq_factor(cfg, S, schedule)
+        n_attn = cfg.n_layers if cfg.family != "hybrid" \
+            else cfg.n_layers // max(1, cfg.hybrid_period)
+        per_layer = 4.0 * tokens * kv_eff * cfg.n_heads * cfg.head_dim
+        f_attn = per_layer * n_attn * (3.0 if remat else 2.0) / 2.0 * 2.0 / 2.0
+        # fwd = per_layer, bwd = 2x, remat adds fwd again
+        f_attn = per_layer * n_attn * ((1 + 1 + 2) if remat else (1 + 2))
+    f_ssm = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        n_ssm = cfg.n_layers
+        f_ssm = 6.0 * tokens * cfg.d_inner * cfg.ssm_state * n_ssm * \
+            (4 if remat else 3)
+    flops = matmul + f_attn + f_ssm
+    model_flops = 6.0 * Na * tokens
+
+    # ---------------- HBM traffic per chip ----------------
+    fsdp_deg = r.dp if fsdp else 1
+    param_shard = N / (tp * fsdp_deg)
+    weight_read = 3.0 * (N / tp) * 2          # fwd + remat + bwd read bf16/tp
+    opt_rw = 5.0 * param_shard * 4            # adam m,v,p fp32 rw
+    grad_rw = 2.0 * param_shard * 4
+    tok_local = tokens / dp_total
+    act_d = cfg.d_model * 2
+    sp = tp if seq_shard else 1
+    act_rw = 12.0 * cfg.n_layers * (tok_local / sp) * act_d \
+        + 6.0 * cfg.n_layers * tok_local * act_d / tp
+    traffic = weight_read + opt_rw + grad_rw + act_rw
+    # microbatching repeats weight gathers/reads per microbatch
+    traffic += (r.microbatch - 1) * weight_read * 0.5
+
+    # ---------------- collective wire bytes per chip ----------------
+    wire = 0.0
+    n_layers = cfg.n_layers
+    # TP activation collectives (Megatron-SP): ~4 per layer fwd, 4 bwd
+    if tp > 1:
+        blocks = 2 if cfg.family not in ("ssm",) else 1
+        wire += 2 * 2 * blocks * n_layers * (tok_local * act_d) * (tp - 1) / tp
+    # FSDP weight all-gathers: fwd + remat + bwd
+    if fsdp and fsdp_deg > 1:
+        wire += 3 * (N * 2 / tp) * (fsdp_deg - 1) / fsdp_deg * r.microbatch
+    # gradient reduction over (pods x dp): all-reduce of bf16 grads/tp
+    red = dp_total if not fsdp else r.pods   # FSDP reduce-scatters within pod
+    if fsdp and r.dp > 1:
+        wire += (N * 2 / tp) * (r.dp - 1) / r.dp          # reduce-scatter
+    if red > 1:
+        wire += 2 * (N * 2 / (tp * (fsdp_deg if fsdp else 1))) * (red - 1) / red
+    # MoE all-to-all: dispatch+combine, fwd+bwd
+    if cfg.is_moe:
+        wire += 6.0 * (tokens / chips) * cfg.top_k * act_d
+
+    # ---------------- HBM footprint per chip ----------------
+    act_saved = cfg.n_layers * (tok_local / (sp * r.microbatch)) * act_d
+    if not remat:
+        act_saved *= 8
+    hbm = param_shard * 16 + act_saved + (N / tp) * 2
+    if cfg.is_moe:
+        hbm += 0.0
+    feasible = hbm < hw["hbm_bytes"] * 0.92
+    if not feasible:
+        notes.append(f"OOM est {hbm/1e9:.1f} GB/chip")
+
+    return RooflineTerms(
+        compute_s=flops / (chips * hw["peak_flops"]),
+        memory_s=traffic / hw["hbm_bw"],
+        collective_s=wire / hw["link_bw"],
+        flops_per_chip=flops / chips,
+        traffic_per_chip=traffic,
+        wire_per_chip=wire,
+        hbm_per_chip=hbm,
+        feasible=feasible,
+        model_flops=model_flops,
+        notes="; ".join(notes),
+    )
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    if cfg.family == "ssm":
+        return cfg.n_layers * B * (cfg.d_inner * cfg.ssm_state * 4 +
+                                   (cfg.ssm_conv - 1) * cfg.d_inner * 2)
+    per_tok = cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(1, cfg.hybrid_period)
+        ssm = cfg.n_layers * B * (cfg.n_ssm_heads * cfg.ssm_head_dim *
+                                  cfg.ssm_state * 4)
+        return n_attn * B * S * per_tok + ssm
+    if cfg.attention == "swa":
+        S = min(S, cfg.window)
+    if cfg.attention == "local_global":
+        return (cfg.n_layers // 2) * B * (min(S, cfg.window) + S) * per_tok
+    return cfg.n_layers * B * S * per_tok
+
+
+def decode_terms(cfg: ModelConfig, shape: ShapeConfig, r: Resources, *,
+                 weight_mode: str = "stationary",
+                 hw: Dict[str, float] = HW) -> RooflineTerms:
+    B, S = shape.global_batch, shape.seq_len
+    Na = cfg.active_param_count()
+    N = cfg.param_count()
+    chips = r.chips
+    tp = r.tp
+
+    flops = 2.0 * Na * B
+    cache = _cache_bytes(cfg, B, S)
+    if cfg.has_attention:
+        flops += 4.0 * B * _attn_seq_factor(cfg, min(S, 10**9), "dense") * \
+            cfg.n_heads * cfg.head_dim * \
+            (cfg.n_layers if cfg.family != "hybrid"
+             else cfg.n_layers // max(1, cfg.hybrid_period))
+    model_flops = 2.0 * Na * B
+
+    # memory: every decode step reads all (sharded) weights + cache
+    traffic = (N * 2 / chips if weight_mode == "gathered" else N * 2 / tp) \
+        + cache / chips
+    wire = 0.0
+    if tp > 1:
+        wire += 2 * cfg.n_layers * B * cfg.d_model * 2 * (tp - 1) / tp / \
+            max(1, r.pods * r.dp)
+    if weight_mode == "gathered":
+        wire += (N * 2 / tp) * (r.dp - 1) / max(1, r.dp)
+    if cfg.is_moe:
+        wire += 6.0 * (B / chips) * cfg.top_k * cfg.d_model * 2
+
+    hbm = (N * 2 / chips if weight_mode == "gathered" else N * 2 / tp) \
+        + cache / chips
+    feasible = hbm < hw["hbm_bytes"] * 0.92
+
+    return RooflineTerms(
+        compute_s=flops / (chips * hw["peak_flops"]),
+        memory_s=traffic / hw["hbm_bw"],
+        collective_s=wire / hw["link_bw"],
+        flops_per_chip=flops / chips,
+        traffic_per_chip=traffic,
+        wire_per_chip=wire,
+        hbm_per_chip=hbm,
+        feasible=feasible,
+        model_flops=model_flops,
+        notes="" if feasible else f"OOM est {hbm/1e9:.1f} GB/chip",
+    )
+
+
+def prefill_terms(cfg: ModelConfig, shape: ShapeConfig, r: Resources, *,
+                  schedule: str = "dense",
+                  hw: Dict[str, float] = HW) -> RooflineTerms:
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    Na = cfg.active_param_count()
+    N = cfg.param_count()
+    chips = r.chips
+    tp = r.tp
+    dp_total = r.pods * r.dp
+
+    flops = 2.0 * Na * tokens
+    if cfg.has_attention:
+        kv_eff = _attn_seq_factor(cfg, S, schedule)
+        n_attn = cfg.n_layers if cfg.family != "hybrid" \
+            else cfg.n_layers // max(1, cfg.hybrid_period)
+        flops += 4.0 * tokens * kv_eff * cfg.n_heads * cfg.head_dim * n_attn / 2
+    if cfg.family in ("ssm", "hybrid"):
+        flops += 6.0 * tokens * cfg.d_inner * cfg.ssm_state * cfg.n_layers
+    model_flops = 2.0 * Na * tokens
+
+    tok_local = tokens / dp_total
+    traffic = N * 2 / tp + 6.0 * cfg.n_layers * tok_local * cfg.d_model * 2 \
+        + _cache_bytes(cfg, B, S) / chips
+    wire = 0.0
+    if tp > 1:
+        wire += 4 * cfg.n_layers * tok_local * cfg.d_model * 2 * (tp - 1) / tp
+    if cfg.is_moe:
+        wire += 3.0 * (tokens / chips) * cfg.top_k * cfg.d_model * 2
+    hbm = N * 2 / tp + _cache_bytes(cfg, B, S) / chips \
+        + tok_local * cfg.d_model * 2 * 4
+    feasible = hbm < hw["hbm_bytes"] * 0.92
+    return RooflineTerms(
+        compute_s=flops / (chips * hw["peak_flops"]),
+        memory_s=traffic / hw["hbm_bw"],
+        collective_s=wire / hw["link_bw"],
+        flops_per_chip=flops / chips,
+        traffic_per_chip=traffic,
+        wire_per_chip=wire,
+        hbm_per_chip=hbm,
+        feasible=feasible,
+        model_flops=model_flops,
+        notes="" if feasible else f"OOM est {hbm/1e9:.1f} GB/chip",
+    )
+
+
+def terms_for(cfg: ModelConfig, shape: ShapeConfig, r: Resources,
+              **kw) -> RooflineTerms:
+    if shape.kind == "train":
+        return train_terms(cfg, shape, r, **kw)
+    if shape.kind == "prefill":
+        return prefill_terms(cfg, shape, r, **kw)
+    return decode_terms(cfg, shape, r, **kw)
+
+
+def chip_seconds(t: RooflineTerms, r: Resources) -> float:
+    """The TPU 'monetary cost' (paper §III-C: container-hours)."""
+    return t.step_s * r.chips

@@ -1,0 +1,74 @@
+"""System-R (Selinger) bottom-up left-deep join ordering [13], extended with
+per-operator resource planning via OperatorCosting (paper §VI-C: "we
+extended the getPlanCost method of our cost model to first perform the
+resource planning and then return the sub-plan cost").
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, FrozenSet, Optional, Sequence
+
+from repro.core.plans import (IMPLS, OperatorCosting, PlanNode, has_edge,
+                              leaf)
+from repro.core.schema import Schema
+
+
+def selinger_plan(schema: Schema, tables: Sequence[str],
+                  costing: OperatorCosting,
+                  impls: Sequence[str] = IMPLS) -> Optional[PlanNode]:
+    """Optimal left-deep plan under the (resource-aware) cost model."""
+    tables = tuple(tables)
+    n = len(tables)
+    best: Dict[FrozenSet[str], PlanNode] = {}
+    for t in tables:
+        best[frozenset({t})] = leaf(schema, t)
+    if n == 1:
+        return best[frozenset(tables)]
+
+    for size in range(2, n + 1):
+        for combo in itertools.combinations(tables, size):
+            s = frozenset(combo)
+            cand: Optional[PlanNode] = None
+            for t in combo:
+                rest = s - {t}
+                sub = best.get(rest)
+                if sub is None:
+                    continue
+                tleaf = best[frozenset({t})]
+                if not has_edge(schema, sub, tleaf):
+                    continue                      # avoid cross joins
+                plan = costing.best_join(schema, sub, tleaf, impls)
+                if cand is None or plan.total_cost < cand.total_cost:
+                    cand = plan
+            if cand is not None:
+                best[s] = cand
+
+    full = frozenset(tables)
+    if full in best:
+        return best[full]
+    # fall back: allow one cross join level for disconnected queries
+    for t in tables:
+        rest = full - {t}
+        if rest in best:
+            return costing.best_join(schema, best[rest],
+                                     best[frozenset({t})], impls)
+    return None
+
+
+def exhaustive_left_deep(schema: Schema, tables: Sequence[str],
+                         costing: OperatorCosting,
+                         impls: Sequence[str] = IMPLS) -> Optional[PlanNode]:
+    """All n! left-deep orders — oracle used by tests to validate Selinger."""
+    best = None
+    for perm in itertools.permutations(tables):
+        plan = leaf(schema, perm[0])
+        ok = True
+        for t in perm[1:]:
+            tl = leaf(schema, t)
+            if not has_edge(schema, plan, tl):
+                ok = False
+                break
+            plan = costing.best_join(schema, plan, tl, impls)
+        if ok and (best is None or plan.total_cost < best.total_cost):
+            best = plan
+    return best

@@ -1,0 +1,241 @@
+"""RAQO-for-TPU: joint (parallelism plan x mesh resources) optimization.
+
+This is the paper's architecture (Fig 8b) transplanted: the "query" is an
+(architecture x input shape x objective), the "query plan" is the discrete
+parallelism plan (attention schedule, weight mode, remat, FSDP — the
+analog of {BHJ, SMJ} operator implementations), the "resource plan" is
+(pods, dp, tp, microbatch), and the cost model is the three-term roofline.
+Resource planning reuses Algorithm 1 (repro.core.hillclimb.hill_climb) and
+the resource-plan cache verbatim — same code paths as the DB-domain
+reproduction.
+
+Use-cases mirror §IV:
+    r => p : best plan for a fixed chip budget       (plan_for_resources)
+    => (p,r): best joint plan                        (joint)
+    c => (p,r): best time within a chip-seconds $$   (for_budget)
+Adaptive RAQO (§VIII): ``replan`` re-optimizes for degraded cluster
+conditions (lost pods/chips) — used by the elastic restart path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.cluster import ClusterConditions, PlanningStats, ResourceDim
+from repro.core.hillclimb import brute_force, hill_climb
+from repro.core.plan_cache import ResourcePlanCache
+from repro.core.roofline import (HW, Resources, RooflineTerms, chip_seconds,
+                                 terms_for)
+
+
+def _pows2(lo: int, hi: int) -> Tuple[int, ...]:
+    out = []
+    v = lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuCluster:
+    """Current cluster condition (the RM view): available slices."""
+    max_pods: int = 2
+    max_dp: int = 16
+    max_tp: int = 16
+    hbm_per_chip: float = HW["hbm_bytes"]
+    max_chips: Optional[int] = None          # degraded clusters (elastic)
+
+    def dims(self, shape: ShapeConfig) -> ClusterConditions:
+        max_mb = 8 if shape.kind == "train" else 1
+        return ClusterConditions(dims=(
+            ResourceDim("pods", 1, self.max_pods,
+                        values=_pows2(1, self.max_pods)),
+            ResourceDim("dp", 1, self.max_dp, values=_pows2(1, self.max_dp)),
+            ResourceDim("tp", 1, self.max_tp, values=_pows2(1, self.max_tp)),
+            ResourceDim("microbatch", 1, max_mb, values=_pows2(1, max_mb)),
+        ))
+
+
+# "operator implementations" per shape kind — the BHJ/SMJ analog
+PLAN_CHOICES: Dict[str, List[Dict]] = {
+    "train": [
+        {"schedule": "dense", "remat": True, "fsdp": True, "seq_shard": True},
+        {"schedule": "causal_skip", "remat": True, "fsdp": True,
+         "seq_shard": True},
+        {"schedule": "causal_skip", "remat": False, "fsdp": True,
+         "seq_shard": True},
+        {"schedule": "causal_skip", "remat": True, "fsdp": False,
+         "seq_shard": True},
+    ],
+    "prefill": [
+        {"schedule": "dense"},
+        {"schedule": "causal_skip"},
+    ],
+    "decode": [
+        {"weight_mode": "stationary"},
+        {"weight_mode": "gathered"},
+    ],
+}
+
+
+@dataclasses.dataclass
+class ShardingDecision:
+    arch: str
+    shape: str
+    resources: Resources
+    plan_choice: Dict
+    terms: RooflineTerms
+    objective_value: float
+    planner_seconds: float
+    stats: PlanningStats
+
+    def describe(self) -> str:
+        r, t = self.resources, self.terms
+        return (f"{self.arch} x {self.shape}: pods={r.pods} dp={r.dp} "
+                f"tp={r.tp} mb={r.microbatch} ({r.chips} chips)  "
+                f"plan={self.plan_choice}  step={t.step_s*1e3:.2f} ms  "
+                f"[compute {t.compute_s*1e3:.2f} | memory {t.memory_s*1e3:.2f}"
+                f" | collective {t.collective_s*1e3:.2f}] "
+                f"bottleneck={t.bottleneck} hbm={t.hbm_per_chip/1e9:.1f}GB")
+
+
+@dataclasses.dataclass
+class ShardingPlanner:
+    cluster: TpuCluster = dataclasses.field(default_factory=TpuCluster)
+    resource_planning: str = "hillclimb"       # hillclimb | brute
+    cache: Optional[ResourcePlanCache] = None
+    objective: str = "time"                    # time | chip_seconds
+
+    def _objective(self, t: RooflineTerms, r: Resources) -> float:
+        if not t.feasible:
+            return math.inf
+        if self.objective == "chip_seconds":
+            return chip_seconds(t, r)
+        return t.step_s
+
+    def _cost_fn(self, cfg: ModelConfig, shape: ShapeConfig, choice: Dict,
+                 budget: Optional[int]):
+        def fn(res_tuple: Tuple[int, ...]) -> float:
+            r = Resources(*res_tuple)
+            if budget is not None and r.chips > budget:
+                return math.inf
+            if self.cluster.max_chips is not None and \
+                    r.chips > self.cluster.max_chips:
+                return math.inf
+            # batch divisibility feasibility
+            if shape.kind == "train" and \
+                    shape.global_batch % (r.pods * r.dp * r.microbatch):
+                return math.inf
+            t = terms_for(cfg, shape, r,
+                          **{**choice, "hw": {**HW,
+                                              "hbm_bytes":
+                                              self.cluster.hbm_per_chip}})
+            return self._objective(t, r)
+        return fn
+
+    def _data_key(self, cfg: ModelConfig, shape: ShapeConfig) -> float:
+        """Data characteristics for the plan cache: active-GB x tokens."""
+        toks = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1)
+        return cfg.active_param_count() / 1e9 * 1e6 + toks / 1e3
+
+    def joint(self, cfg: ModelConfig, shape: ShapeConfig, arch: str = "",
+              chip_budget: Optional[int] = None) -> ShardingDecision:
+        """=> (p, r): enumerate plan choices (operator implementations),
+        hill-climb resources per choice — exactly the paper's §VI loop."""
+        t0 = time.perf_counter()
+        stats = PlanningStats()
+        dims = self.cluster.dims(shape)
+        best = None
+        for choice in PLAN_CHOICES[shape.kind]:
+            # inapplicable choices (e.g. causal_skip for attention-free)
+            if cfg.family == "ssm" and choice.get("schedule") == "causal_skip":
+                continue
+            key = self._data_key(cfg, shape)
+            model_id = f"{shape.kind}:{sorted(choice.items())}"
+            fn = self._cost_fn(cfg, shape, choice, chip_budget)
+            res = None
+            if self.cache is not None:
+                hit = self.cache.lookup(model_id, cfg.family, key,
+                                        dims, stats)
+                if hit is not None:
+                    # validate under *current* cluster conditions — a cached
+                    # plan from a healthier cluster may be infeasible now
+                    # (adaptive RAQO, paper §VIII)
+                    if math.isfinite(fn(hit)):
+                        res = hit
+            if res is None:
+                if self.resource_planning == "brute":
+                    res, cost = brute_force(fn, dims, stats)
+                else:
+                    res, cost = hill_climb(fn, dims, stats=stats)
+                    # multi-start: also climb from the max config (decode
+                    # workloads are often best at large tp)
+                    res2, cost2 = hill_climb(fn, dims,
+                                             start=dims.max_config(),
+                                             stats=stats)
+                    if cost2 < cost:
+                        res, cost = res2, cost2
+                    if not math.isfinite(cost):
+                        # both starts stranded on an infeasible plateau
+                        # (OOM below / budget above).  The TPU resource grid
+                        # is tiny (<= few hundred points) so exhaustive
+                        # search is cheap — the paper-scale grids where
+                        # hill climbing matters are the DB-domain ones.
+                        res, cost = brute_force(fn, dims, stats)
+                if self.cache is not None and math.isfinite(cost):
+                    self.cache.insert(model_id, cfg.family, key, res)
+            else:
+                cost = fn(res)
+            if not math.isfinite(cost):
+                continue
+            r = Resources(*res)
+            t = terms_for(cfg, shape, r, **choice)
+            if best is None or cost < best.objective_value:
+                best = ShardingDecision(
+                    arch=arch or cfg.name, shape=shape.name, resources=r,
+                    plan_choice=choice, terms=t, objective_value=cost,
+                    planner_seconds=0.0, stats=stats)
+        if best is None:
+            raise RuntimeError(
+                f"no feasible (plan, resources) for {cfg.name} x {shape.name}"
+                f" under {self.cluster}")
+        best.planner_seconds = time.perf_counter() - t0
+        return best
+
+    def plan_for_resources(self, cfg: ModelConfig, shape: ShapeConfig,
+                           resources: Resources) -> ShardingDecision:
+        """r => p: fixed chips (tenant quota), pick the best plan choice."""
+        t0 = time.perf_counter()
+        best = None
+        for choice in PLAN_CHOICES[shape.kind]:
+            if cfg.family == "ssm" and choice.get("schedule") == "causal_skip":
+                continue
+            t = terms_for(cfg, shape, resources, **choice)
+            val = self._objective(t, resources)
+            if best is None or val < best.objective_value:
+                best = ShardingDecision(
+                    arch=cfg.name, shape=shape.name, resources=resources,
+                    plan_choice=choice, terms=t, objective_value=val,
+                    planner_seconds=0.0, stats=PlanningStats())
+        best.planner_seconds = time.perf_counter() - t0
+        return best
+
+    def for_budget(self, cfg: ModelConfig, shape: ShapeConfig,
+                   chip_budget: int) -> ShardingDecision:
+        """c => (p, r): best step time using at most ``chip_budget`` chips."""
+        return self.joint(cfg, shape, chip_budget=chip_budget)
+
+    def replan(self, cfg: ModelConfig, shape: ShapeConfig,
+               lost_chips: int) -> ShardingDecision:
+        """Adaptive RAQO: cluster degraded (node failures) — re-optimize."""
+        degraded = dataclasses.replace(
+            self.cluster,
+            max_chips=(self.cluster.max_pods * self.cluster.max_dp *
+                       self.cluster.max_tp - lost_chips))
+        planner = dataclasses.replace(self, cluster=degraded)
+        return planner.joint(cfg, shape)

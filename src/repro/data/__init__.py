@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticPipeline, make_batch_fn  # noqa: F401

@@ -1,0 +1,111 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Grid (B, H, nq, nkv) — the minor (kv) axis iterates sequentially on TPU, so
+the running (max, denom, acc) live in VMEM scratch across kv steps and the
+output tile is written on the last step.  BlockSpecs tile (bq x hd) /
+(bkv x hd) into VMEM; GQA indexes the kv head as h // (H // KV) so repeated
+KV heads are never materialized.  MXU alignment: use bq/bkv multiples of
+128 and hd in {64, 128, 256}.
+
+Validated against repro.kernels.ref.attention_ref in interpret mode (this
+container is CPU-only; TPU is the target).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            cap: Optional[float], bq: int, bkv: int, nkv: int):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)      # (bq, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bkv, hd)
+    v = v_ref[0, :, 0, :]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    i = pl.program_id(2)
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    if causal:
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v[...],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_prev * corr[:, None] + pv
+
+    @pl.when(j == nkv - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (acc_ref[...] /
+                             jnp.maximum(l_ref[...], 1e-30)[:, None]
+                             ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    attn_softcap: Optional[float] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False):
+    """q: (B, S, H, hd);  k, v: (B, Skv, KV, hd).  S, Skv must be multiples
+    of the block sizes (callers pad; tests sweep exact shapes)."""
+    B, S, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    g = H // KV
+    bq, bkv = min(block_q, S), min(block_kv, Skv)
+    assert S % bq == 0 and Skv % bkv == 0, (S, bq, Skv, bkv)
+    nq, nkv = S // bq, Skv // bkv
+    grid = (B, H, nq, nkv)
+
+    kernel = functools.partial(
+        _kernel, scale=hd ** -0.5, causal=causal, window=window,
+        cap=attn_softcap, bq=bq, bkv=bkv, nkv=nkv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bkv, 1, hd),
+                         lambda b, h, i, j, g=g: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bkv, 1, hd),
+                         lambda b, h, i, j, g=g: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        scratch_shapes=[
+            # m, l, acc live in VMEM across the (sequential) kv grid dim
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

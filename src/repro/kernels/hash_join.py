@@ -1,0 +1,72 @@
+"""Broadcast hash join (BHJ) — the paper's physical operator, adapted to TPU.
+
+The paper's BHJ broadcasts the small relation into every container's memory
+and streams the big one.  TPU adaptation: the small (build) side lives
+entirely in VMEM for every probe tile — a *broadcast compare join* on the
+VPU (TPUs have no scatter-probe hash tables in VMEM; an O(bs x R) masked
+compare against a VMEM-resident build side is the systolic equivalent, and
+PK-join semantics make the match unique).  The feasibility condition "build
+side fits in VMEM" is exactly the paper's 'small relation fits in container
+memory' OOM switch point — repro.core.cost_model drives the same rule.
+
+Grid (n_probe_tiles, n_build_tiles): build tiles iterate on the minor axis
+with the running (found, value) pair in VMEM scratch, so build sides larger
+than one tile still work (multi-tile VMEM residency).
+
+Oracle: repro.kernels.ref.hash_join_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(probe_ref, bkeys_ref, bvals_ref, out_ref, val_ref, *,
+            nb: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full_like(val_ref, -1)
+
+    probe = probe_ref[...]                      # (bs,)
+    bkeys = bkeys_ref[...]                      # (bt,)
+    bvals = bvals_ref[...]
+    eq = probe[:, None] == bkeys[None, :]       # (bs, bt)
+    any_ = eq.any(axis=1)
+    # PK join: at most one match; select it with a masked max
+    picked = jnp.max(jnp.where(eq, bvals[None, :], -1), axis=1)
+    val_ref[...] = jnp.where(any_, picked, val_ref[...])
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        out_ref[...] = val_ref[...]
+
+
+def hash_join(probe_keys, build_keys, build_vals, *, block_probe: int = 1024,
+              block_build: int = 2048, interpret: bool = False):
+    """probe_keys: (S,) int32; build_keys/vals: (R,) int32.
+    Returns (S,) int32 joined values (-1 = no match)."""
+    S, = probe_keys.shape
+    R, = build_keys.shape
+    bs, bt = min(block_probe, S), min(block_build, R)
+    assert S % bs == 0 and R % bt == 0, (S, bs, R, bt)
+    grid = (S // bs, R // bt)
+    kernel = functools.partial(_kernel, nb=R // bt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+            pl.BlockSpec((bt,), lambda i, j: (j,)),
+            pl.BlockSpec((bt,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((S,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bs,), jnp.int32)],
+        interpret=interpret,
+    )(probe_keys, build_keys, build_vals)

@@ -1,0 +1,90 @@
+"""Mamba1 selective scan as a Pallas TPU kernel.
+
+Hardware adaptation of the CUDA selective-scan: parallel over the channel
+(D) dimension on the VPU lanes, sequential over time *chunks* on the
+minor grid axis with the SSM state held in VMEM scratch — the TPU
+equivalent of the original kernel's shared-memory state carry.
+
+Grid (B, nd, nc): nc (time chunks) iterates last = sequentially; the state
+h (bd, N) persists in VMEM across chunks.  Inside a chunk a fori_loop steps
+time with (bd, N)-shaped VPU ops — time is inherently sequential, channels
+are the vector axis.  BlockSpecs keep (chunk x bd) input tiles and the
+(bd, N) state in VMEM; bd should be a multiple of the 128-lane register
+width.
+
+Oracle: repro.kernels.ref.selective_scan_ref (validated interpret=True).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hlast_ref, h_ref, *,
+            chunk: int, nc: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...].astype(jnp.float32)                 # (bd, N)
+
+    def step(t, h):
+        u_t = u_ref[0, t, :].astype(jnp.float32)       # (bd,)
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)     # (bd,)
+        b_t = b_ref[0, t, :].astype(jnp.float32)       # (N,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)       # (N,)
+        dA = jnp.exp(dt_t[:, None] * A)                # (bd, N)
+        h = dA * h + (dt_t * u_t)[:, None] * b_t[None, :]
+        y_ref[0, t, :] = (h * c_t[None, :]).sum(axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(j == nc - 1)
+    def _finish():
+        hlast_ref[0, :, :] = h
+
+
+def selective_scan(u, dt, A, Bmat, Cmat, *, chunk: int = 256,
+                   block_d: int = 512, interpret: bool = False):
+    """u, dt: (B, S, D); A: (D, N); Bmat, Cmat: (B, S, N).
+    Returns (y (B,S,D) f32, h_last (B,D,N) f32).  S % chunk == 0 and
+    D % block_d == 0 (callers pad; tests sweep exact shapes)."""
+    B, S, D = u.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    bd = min(block_d, D)
+    assert S % chunk == 0 and D % bd == 0, (S, chunk, D, bd)
+    nc, nd = S // chunk, D // bd
+    grid = (B, nd, nc)
+
+    kernel = functools.partial(_kernel, chunk=chunk, nc=nc)
+    y, hlast = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, j: (b, j, d)),   # u
+            pl.BlockSpec((1, chunk, bd), lambda b, d, j: (b, j, d)),   # dt
+            pl.BlockSpec((bd, N), lambda b, d, j: (d, 0)),             # A
+            pl.BlockSpec((1, chunk, N), lambda b, d, j: (b, j, 0)),    # B
+            pl.BlockSpec((1, chunk, N), lambda b, d, j: (b, j, 0)),    # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, j: (b, j, d)),   # y
+            pl.BlockSpec((1, bd, N), lambda b, d, j: (b, d, 0)),       # h_last
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, Bmat, Cmat)
+    return y, hlast

@@ -1,0 +1,68 @@
+"""Sort-merge join (SMJ) on sorted runs — the paper's second operator on TPU.
+
+SMJ's insight is that after the shuffle both sides are sorted, so matching
+is a linear merge.  A sequential two-pointer merge is hostile to a vector
+unit; the TPU-native equivalent of merging sorted runs is a *tiled rank
+computation*: for every probe key, its position in the sorted build side is
+rank(key) = #(build_keys <= key) - 1, accumulated tile-by-tile with
+vectorized compares (each build tile contributes a partial count — this is
+the merge, executed as data-parallel rank arithmetic).  A second kernel
+pass verifies the key at the computed rank and emits the joined value.
+
+Grid pass 1: (n_probe_tiles, n_build_tiles), counts in VMEM scratch.
+Pass 2 gathers build values at the ranks (XLA gather; the compare/count
+streaming is the kernel-worthy part).
+
+Oracle: repro.kernels.ref.merge_join_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rank_kernel(probe_ref, bkeys_ref, rank_ref, acc_ref, *, nb: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    probe = probe_ref[...]
+    bkeys = bkeys_ref[...]
+    le = (bkeys[None, :] <= probe[:, None]).sum(axis=1).astype(jnp.int32)
+    acc_ref[...] += le
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        rank_ref[...] = acc_ref[...] - 1
+
+
+def merge_join(probe_keys, build_keys, build_vals, *, block_probe: int = 1024,
+               block_build: int = 2048, interpret: bool = False):
+    """build_keys must be sorted ascending.  Same semantics as hash_join."""
+    S, = probe_keys.shape
+    R, = build_keys.shape
+    bs, bt = min(block_probe, S), min(block_build, R)
+    assert S % bs == 0 and R % bt == 0, (S, bs, R, bt)
+    grid = (S // bs, R // bt)
+    kernel = functools.partial(_rank_kernel, nb=R // bt)
+    ranks = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+            pl.BlockSpec((bt,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((S,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bs,), jnp.int32)],
+        interpret=interpret,
+    )(probe_keys, build_keys)
+    rank_c = jnp.clip(ranks, 0, R - 1)
+    hit = (ranks >= 0) & (build_keys[rank_c] == probe_keys)
+    return jnp.where(hit, build_vals[rank_c], -1)

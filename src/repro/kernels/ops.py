@@ -1,0 +1,71 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Pallas targets TPU; on any other backend the wrappers run the kernel body
+in interpret mode (Python on CPU) so correctness is verifiable everywhere.
+``impl="ref"`` selects the pure-jnp oracle — the model stack uses the jnp
+paths for the CPU dry-run, and these wrappers are the TPU deployment path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import hash_join as _hj
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import merge_join as _mj
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "attn_softcap", "block_q",
+                                             "block_kv", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    attn_softcap: Optional[float] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    impl: str = "pallas"):
+    if impl == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 attn_softcap=attn_softcap)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               attn_softcap=attn_softcap, block_q=block_q,
+                               block_kv=block_kv, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "impl"))
+def selective_scan(u, dt, A, Bmat, Cmat, *, chunk: int = 256,
+                   block_d: int = 512, impl: str = "pallas"):
+    if impl == "ref":
+        return ref.selective_scan_ref(u, dt, A, Bmat, Cmat)
+    return _ms.selective_scan(u, dt, A, Bmat, Cmat, chunk=chunk,
+                              block_d=block_d, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_probe", "block_build",
+                                             "impl"))
+def bhj_join(probe_keys, build_keys, build_vals, *, block_probe: int = 1024,
+             block_build: int = 2048, impl: str = "pallas"):
+    if impl == "ref":
+        return ref.hash_join_ref(probe_keys, build_keys, build_vals)
+    return _hj.hash_join(probe_keys, build_keys, build_vals,
+                         block_probe=block_probe, block_build=block_build,
+                         interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_probe", "block_build",
+                                             "impl"))
+def smj_join(probe_keys, build_keys, build_vals, *, block_probe: int = 1024,
+             block_build: int = 2048, impl: str = "pallas"):
+    if impl == "ref":
+        return ref.merge_join_ref(probe_keys, build_keys, build_vals)
+    return _mj.merge_join(probe_keys, build_keys, build_vals,
+                          block_probe=block_probe, block_build=block_build,
+                          interpret=_interpret())

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  attn_softcap: Optional[float] = None):
+    """Naive softmax attention.  q: (B,S,H,hd); k, v: (B,Skv,KV,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) * hd ** -0.5
+    if attn_softcap is not None:
+        s = jnp.tanh(s / attn_softcap) * attn_softcap
+    if causal:
+        qp = jnp.arange(S)[:, None]
+        kp = jnp.arange(k.shape[1])[None, :]
+        mask = kp <= qp
+        if window is not None:
+            mask &= (qp - kp) < window
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return o.astype(q.dtype)
+
+
+def selective_scan_ref(u, dt, A, Bmat, Cmat, h0=None):
+    """Sequential Mamba1 scan.  u, dt: (B,S,D); A: (D,N); Bmat, Cmat: (B,S,N).
+    Returns (y: (B,S,D) f32, h_last)."""
+    Bsz, S, D = u.shape
+    N = A.shape[1]
+    h = jnp.zeros((Bsz, D, N), jnp.float32) if h0 is None else h0
+    Af = A.astype(jnp.float32)
+
+    def step(h, xs):
+        u_, dt_, B_, C_ = xs
+        dtf = dt_.astype(jnp.float32)
+        dA = jnp.exp(dtf[..., None] * Af)
+        dBu = (dtf * u_.astype(jnp.float32))[..., None] * \
+            B_.astype(jnp.float32)[:, None, :]
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, C_.astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, (u.swapaxes(0, 1), dt.swapaxes(0, 1),
+                                   Bmat.swapaxes(0, 1), Cmat.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h
+
+
+def hash_join_ref(probe_keys, build_keys, build_vals):
+    """PK join: for each probe key, the build value whose key matches
+    (or -1).  probe: (S,) i32; build: (R,) i32, vals (R,) i32."""
+    eq = probe_keys[:, None] == build_keys[None, :]           # (S, R)
+    any_ = eq.any(axis=1)
+    idx = jnp.argmax(eq, axis=1)
+    return jnp.where(any_, build_vals[idx], -1)
+
+
+def merge_join_ref(probe_keys, build_keys, build_vals):
+    """Sorted-runs join: build_keys ascending; same semantics as hash join."""
+    pos = jnp.searchsorted(build_keys, probe_keys)
+    pos_c = jnp.clip(pos, 0, build_keys.shape[0] - 1)
+    hit = build_keys[pos_c] == probe_keys
+    return jnp.where(hit, build_vals[pos_c], -1)

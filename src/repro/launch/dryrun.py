@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first backend init).  Everything below is ordinary code.
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out artifacts/dryrun
+
+Per cell this lowers the real step function (train_step for train shapes,
+prefill for prefill shapes, serve_step for decode shapes) against
+ShapeDtypeStruct inputs on the production mesh, compiles it, and records
+memory_analysis / cost_analysis / loop-corrected HLO stats (FLOPs,
+collective bytes) to a JSON artifact for §Roofline.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, get_shape,
+                           shape_applicable)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (batch_shardings, batch_specs,
+                                decode_input_specs, plan_for,
+                                serve_param_specs, train_state_specs)
+from repro.models.model import build_model
+from repro.optim import AdamW
+from repro.runtime.steps import make_train_step
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               plan_overrides: Optional[Dict[str, Any]] = None,
+               verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one cell; return the roofline record."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan_for(cfg, shape, mesh, **(plan_overrides or {}))
+    model = build_model(cfg, plan)
+    t0 = time.perf_counter()
+
+    with mesh:
+        if shape.kind == "train":
+            state_struct, state_specs = train_state_specs(model)
+            opt = AdamW(lr=1e-4)
+            step_fn = make_train_step(model, opt)
+            b_struct = batch_specs(cfg, shape)
+            b_shard = batch_shardings(cfg, shape, mesh, plan)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(_ns(mesh, state_specs), b_shard),
+                out_shardings=(_ns(mesh, state_specs), None),
+            ).lower(state_struct, b_struct)
+        elif shape.kind == "prefill":
+            params_struct = serve_param_specs(cfg, model)
+            p_shard = _ns(mesh, model.param_specs())
+            b_struct = batch_specs(cfg, shape, with_labels=False)
+            b_shard = batch_shardings(cfg, shape, mesh, plan,
+                                      with_labels=False)
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch)
+
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(p_shard, b_shard),
+                out_shardings=None,
+            ).lower(params_struct, b_struct)
+        else:  # decode
+            params_struct = serve_param_specs(cfg, model)
+            p_shard = _ns(mesh, model.param_specs())
+            inputs, cache_struct, qpos = decode_input_specs(cfg, shape, model)
+            cache_shard = _ns(mesh, model.cache_specs())
+            in_shard = jax.tree_util.tree_map(
+                lambda _: NamedSharding(mesh, plan.spec(("batch", None))
+                                        if _.ndim == 2 else
+                                        plan.spec(("batch", None, None))),
+                inputs)
+            qpos_shard = NamedSharding(mesh, plan.spec(("batch",)))
+
+            def serve_step(params, cache, inp, q_pos):
+                return model.decode_step(params, cache, inp, q_pos)
+
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, cache_shard, in_shard, qpos_shard),
+                out_shardings=None,
+            ).lower(params_struct, cache_struct, inputs, qpos)
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    stats = hlo_analysis.analyze(txt)
+    n_dev = mesh.devices.size
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": dict(mesh.shape),
+        "status": "ok",
+        "plan": plan.name,
+        "plan_overrides": plan_overrides or {},
+        "chips": int(n_dev),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": None if mem is None else {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "hlo": {
+            "dot_flops_per_device": stats.dot_flops,
+            "traffic_bytes_per_device": stats.traffic_bytes,
+            "collective_bytes_per_device": dict(stats.collective_bytes),
+            "collective_counts": dict(stats.collective_counts),
+            "wire_bytes_per_device": stats.wire_bytes,
+            "top_collectives": [
+                {"kind": k, "dtype": d, "dims": list(dims), "mult": m,
+                 "bytes": b, "op": op}
+                for k, d, dims, m, b, op in stats.top_collectives],
+        },
+    }
+    if verbose:
+        ca = rec["cost_analysis"].get("flops", 0)
+        print(f"[dryrun] {arch} x {shape_name} x "
+              f"{'multi' if multi_pod else 'single'}: OK "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+              f"dot_flops/dev {stats.dot_flops:.3e}, raw_ca_flops {ca:.3e}, "
+              f"coll {stats.total_collective_bytes/1e9:.3f} GB/dev)")
+        print(f"  memory_analysis: {mem}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x shape) cell")
+    ap.add_argument("--out", default="artifacts/dryrun",
+                    help="output dir for JSON artifacts")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ParallelPlan overrides")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    overrides = json.loads(args.override) if args.override else None
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            if overrides:
+                tag += "__" + "_".join(f"{k}-{v}" for k, v in
+                                       sorted(overrides.items()))
+            path = out_dir / f"{tag}.json"
+            try:
+                rec = lower_cell(arch, shape, multi_pod=mp,
+                                 plan_overrides=overrides)
+            except Exception as e:  # a failure here is a bug in our system
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if mp else "single",
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            path.write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] wrote {len(cells) * len(meshes)} artifacts to {out_dir}"
+          f" ({failures} failures)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

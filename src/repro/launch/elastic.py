@@ -1,0 +1,75 @@
+"""Elastic supervisor: retry loop + adaptive-RAQO replanning.
+
+    PYTHONPATH=src python -m repro.launch.elastic --arch smollm-360m \
+        --smoke --steps 60 -- --fail-at 25
+
+Runs launch/train.py as a subprocess.  On crash (exit != 0) or preemption
+(exit == 17) it consults the sharding planner for the *current* cluster
+condition — if chips were lost, the plan/resources change (adaptive RAQO,
+paper §VIII) — and relaunches; training resumes from the latest checkpoint
+with a resharding restore.  The cluster condition is simulated here via
+--lose-chips-after-crash; on a real deployment it comes from the resource
+manager's health API.
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.sharding_planner import ShardingPlanner, TpuCluster
+
+PREEMPT_EXIT = 17
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_elastic_ckpt")
+    ap.add_argument("--lose-chips-after-crash", type=int, default=128)
+    ap.add_argument("rest", nargs="*")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    plan_cfg = cfg.smoke() if args.smoke else cfg
+    shape = ShapeConfig("train", 128, 8, "train")
+    cluster = TpuCluster()
+    planner = ShardingPlanner(cluster=cluster)
+    decision = planner.joint(cfg, ShapeConfig("train", 4096, 256, "train"),
+                             arch=args.arch)
+    print(f"[elastic] initial RAQO decision: {decision.describe()}")
+
+    lost = 0
+    for attempt in range(args.max_restarts + 1):
+        cmd = [sys.executable, "-m", "repro.launch.train",
+               "--arch", args.arch, "--steps", str(args.steps),
+               "--ckpt-dir", args.ckpt_dir] + \
+            (["--smoke"] if args.smoke else []) + list(args.rest)
+        # only inject the failure on the first attempt
+        if attempt > 0:
+            cmd = [c for i, c in enumerate(cmd)
+                   if not (c == "--fail-at" or
+                           (i > 0 and cmd[i - 1] == "--fail-at"))]
+        print(f"[elastic] attempt {attempt}: {' '.join(cmd[2:])}")
+        rc = subprocess.call(cmd)
+        if rc == 0:
+            print("[elastic] training completed")
+            return 0
+        # crash or preemption: degraded cluster => adaptive RAQO replan
+        lost += args.lose_chips_after_crash if rc != PREEMPT_EXIT else 0
+        print(f"[elastic] exit={rc}; lost chips so far: {lost}; replanning")
+        decision = planner.replan(cfg,
+                                  ShapeConfig("train", 4096, 256, "train"),
+                                  lost_chips=lost)
+        print(f"[elastic] new RAQO decision: {decision.describe()}")
+    print("[elastic] giving up after max restarts")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+smoke tests and benches see the real single CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """make_mesh that tolerates len(jax.devices()) > prod(shape) and stays on
+    the pre-0.9 Auto axis-type behavior."""
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py "
+            "sets this automatically)")
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except Exception:
+        return jax.sharding.Mesh(
+            np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def data_parallel_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n

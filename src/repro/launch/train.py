@@ -1,0 +1,139 @@
+"""Training driver: RAQO-planned, checkpointed, fault-tolerant.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Flow: (1) the RAQO sharding planner picks the joint (plan, resources) for
+the *current* cluster condition; (2) the data pipeline, model, optimizer
+and step function are built under that plan; (3) the loop checkpoints every
+--ckpt-every steps, installs SIGTERM/SIGINT handlers (preemption =>
+checkpoint-then-exit(17)), and resumes from the latest checkpoint on
+relaunch.  Exit code 17 tells the supervisor (launch/elastic.py) "clean
+preemption, relaunch me"; the supervisor may replan on a degraded cluster
+before relaunching (adaptive RAQO).
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core.sharding_planner import ShardingPlanner, TpuCluster
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticPipeline
+from repro.models.model import build_model
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime.steps import TrainState, init_train_state, make_train_step
+from repro.sharding import single_device_plan
+
+PREEMPT_EXIT = 17
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="simulate a node failure at this step (testing)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+
+    # --- RAQO: joint (plan, resources) for the current cluster ----------- #
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        decision = ShardingPlanner().joint(cfg, shape, arch=args.arch)
+        print(f"[raqo] {decision.describe()}")
+        from repro.launch.mesh import make_mesh
+        r = decision.resources
+        mesh = make_mesh((r.pods, r.dp, r.tp), ("pod", "data", "model"))
+        from repro.launch.specs import plan_for
+        plan = plan_for(cfg, shape, mesh)
+        ctx = mesh
+    else:
+        plan = single_device_plan()
+        ctx = None
+
+    model = build_model(cfg, plan)
+    opt = AdamW(lr=cosine_schedule(args.lr, max(1, args.steps // 10),
+                                   args.steps))
+    train_step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    state = init_train_state(model, opt, jax.random.PRNGKey(args.seed))
+    start_step = 0
+    if ckpt.latest_step() is not None:
+        state, extras = ckpt.restore(state)
+        start_step = int(extras.get("data_step", ckpt.latest_step()))
+        print(f"[train] resumed from step {start_step}")
+
+    pipe = SyntheticPipeline(cfg, args.batch, args.seq, seed=args.seed)
+
+    # --- preemption handling --------------------------------------------- #
+    preempted = {"flag": False}
+
+    def on_signal(signum, frame):
+        print(f"[train] signal {signum}: checkpoint-then-exit")
+        preempted["flag"] = True
+
+    signal.signal(signal.SIGTERM, on_signal)
+    signal.signal(signal.SIGINT, on_signal)
+
+    losses = []
+    t0 = time.perf_counter()
+    step = start_step
+    try:
+        while step < args.steps:
+            if step == args.fail_at:
+                print(f"[train] SIMULATED FAILURE at step {step}")
+                raise RuntimeError("simulated node failure")
+            batch = {k: jnp.asarray(v) for k, v in
+                     pipe.batch_at(step).items()}
+            state, metrics = train_step(state, batch)
+            step += 1
+            if step % args.log_every == 0 or step == args.steps:
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                dt = time.perf_counter() - t0
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({dt / max(1, step - start_step):.3f}s/step)")
+            if step % args.ckpt_every == 0 or preempted["flag"] or \
+                    step == args.steps:
+                ckpt.save(step, state, extras={"data_step": step,
+                                               "arch": args.arch},
+                          async_=False)
+            if preempted["flag"]:
+                print(f"[train] preempted at step {step}; checkpoint saved")
+                return PREEMPT_EXIT
+    except RuntimeError as e:
+        # crash path: the supervisor relaunches; state resumes from the
+        # last periodic checkpoint
+        print(f"[train] CRASH: {e}")
+        return 1
+    print(f"[train] done: {step} steps, final loss "
+          f"{losses[-1] if losses else float('nan'):.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,262 @@
+"""Attention: blocked (flash-style) jnp implementation + decode w/ cache.
+
+This is the pure-JAX path used for training, prefill and the multi-pod
+dry-run (Pallas targets TPU and cannot lower on the CPU backend; the Pallas
+kernel in repro.kernels.flash_attention is the TPU-target twin validated in
+interpret mode against repro.kernels.ref).
+
+Memory is O(block_q x block_kv) per step instead of O(S^2): an outer scan
+over query blocks and an inner scan over kv blocks with running
+(max, denom, acc) — the flash recurrence.  GQA never materializes repeated
+KV heads: scores are computed in grouped (B, KV, G, q, kv) layout.
+
+Schedules (the RAQO "operator implementation" choice for attention):
+  dense       : every (i, j) block pair visited, masked.  Simple; 2x FLOP
+                waste for causal.
+  causal_skip : inner loop bound j <= i (dynamic while) — skips fully-masked
+                future blocks; halves causal FLOPs.
+  window      : static band of kv blocks around the diagonal — used for SWA
+                and gemma2 local layers; O(S * window).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import softcap
+
+NEG_INF = -1e30
+
+
+def _block_update(qb, kb, vb, qpos, kvpos, carry, *, scale, causal, window,
+                  cap, g):
+    """One flash step.  qb: (B, bq, H, hd); kb/vb: (B, bkv, KV, hd);
+    qpos: (B, bq); kvpos: (B, bkv); carry = (m, l, acc) with head layout
+    (B, H, bq[, hd]).
+
+    GQA: KV heads are repeated to H *per block* (blocks are small, the
+    repeat is device-local).  Keeping the H dim fused end-to-end is critical
+    under tensor parallelism: splitting H into (KV, G) creates dimensions
+    (8, 8) that a 16-way model axis cannot shard, forcing GSPMD to reshard
+    scores/pv partials on every block step (measured ~10 TB/device/step on
+    deepseek-67b train_4k before this layout)."""
+    m, l, acc = carry
+    if g > 1:
+        kb = jnp.repeat(kb, g, axis=2)              # (B, bkv, H, hd)
+        vb = jnp.repeat(vb, g, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    mask = (kvpos >= 0)[:, None, None, :]
+    if causal:
+        rel = qpos[:, None, :, None] - kvpos[:, None, None, :]
+        mask &= rel >= 0
+        if window is not None:
+            mask &= rel < window
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bhqs,bshd->bhqd", p.astype(vb.dtype), vb,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * corr[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, q_positions, kv_positions, *, causal=True,
+                    window: Optional[int] = None, attn_softcap=None,
+                    block_q: int = 512, block_kv: int = 512,
+                    schedule: str = "dense"):
+    """q: (B, Sq, H, hd);  k, v: (B, Skv, KV, hd);  positions int32, -1 =
+    invalid slot.  Returns (B, Sq, H, hd) in q.dtype."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    bq, bkv = min(block_q, Sq), min(block_kv, Skv)
+    # pad to block multiples
+    pq = (-Sq) % bq
+    pkv = (-Skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pq)), constant_values=-1)
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pkv)), constant_values=-1)
+    nq, nkv = q.shape[1] // bq, k.shape[1] // bkv
+    qg = q.reshape(B, nq, bq, H, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_positions.reshape(B, nq, bq).transpose(1, 0, 2)
+    kg = k.reshape(B, nkv, bkv, KV, hd)
+    vg = v.reshape(B, nkv, bkv, KV, hd)
+    kp = kv_positions.reshape(B, nkv, bkv)
+    upd = functools.partial(_block_update, scale=scale, causal=causal,
+                            window=window, cap=attn_softcap, g=G)
+
+    def init_carry():
+        return (jnp.full((B, H, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, bq), jnp.float32),
+                jnp.zeros((B, H, bq, hd), jnp.float32))
+
+    if schedule == "window" and window is not None and causal:
+        # static band: kv block offsets covering [q_start - window, q_end]
+        noff = window // bkv + (2 if bq > 1 else 1)
+        def q_block(_, xs):
+            i, qb, qpb = xs
+            def kv_step(carry, off):
+                jraw = i * bq // bkv - off
+                j = jnp.clip(jraw, 0, nkv - 1)
+                kb = jax.lax.dynamic_index_in_dim(kg, j, axis=1, keepdims=False)
+                vb = jax.lax.dynamic_index_in_dim(vg, j, axis=1, keepdims=False)
+                kpb = jax.lax.dynamic_index_in_dim(kp, j, axis=1, keepdims=False)
+                # clipped (out-of-range) offsets would re-visit block 0 and
+                # double-count it — invalidate their positions instead
+                kpb = jnp.where(jraw >= 0, kpb, -1)
+                return upd(qb, kb, vb, qpb, kpb, carry), None
+            carry, _ = jax.lax.scan(kv_step, init_carry(),
+                                    jnp.arange(noff - 1, -1, -1))
+            return None, carry
+        _, (m, l, acc) = jax.lax.scan(
+            q_block, None, (jnp.arange(nq), qg, qp))
+    elif schedule == "causal_skip" and causal and window is None:
+        # static lower-triangle block schedule: one scan over the
+        # nq*(nq+1)/2 valid (i, j) pairs — ~halves causal FLOPs vs dense
+        # and stays reverse-differentiable (a dynamic-bound while_loop is
+        # not).  The output buffer rides in the carry; each q-row's flash
+        # state resets at its first pair and is written out at its last.
+        pairs = [(i, j) for i in range(nq) for j in range(i * bq // bkv + 1)]
+        ii = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        jj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        first = jnp.asarray([p[1] == 0 for p in pairs], bool)
+        last = jnp.asarray(
+            [pi == len(pairs) - 1 or pairs[pi + 1][0] != pairs[pi][0]
+             for pi in range(len(pairs))], bool)
+        H_ = q.shape[2]
+        outbuf0 = jnp.zeros((nq, B, H_, bq, hd), jnp.float32)
+
+        def pair_step(carry, xs):
+            m, l, acc, outbuf = carry
+            i, j, is_first, is_last = xs
+            m0, l0, acc0 = init_carry()
+            m = jnp.where(is_first, m0, m)
+            l = jnp.where(is_first, l0, l)
+            acc = jnp.where(is_first, acc0, acc)
+            qb = jax.lax.dynamic_index_in_dim(qg, i, axis=0, keepdims=False)
+            qpb = jax.lax.dynamic_index_in_dim(qp, i, axis=0, keepdims=False)
+            kb = jax.lax.dynamic_index_in_dim(kg, j, axis=1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vg, j, axis=1, keepdims=False)
+            kpb = jax.lax.dynamic_index_in_dim(kp, j, axis=1, keepdims=False)
+            m, l, acc = upd(qb, kb, vb, qpb, kpb, (m, l, acc))
+            done = (acc / jnp.maximum(l[..., None], 1e-30)) * \
+                is_last.astype(jnp.float32)
+            outbuf = jax.lax.dynamic_update_slice(
+                outbuf, jnp.where(is_last, done, jax.lax.dynamic_index_in_dim(
+                    outbuf, i, axis=0, keepdims=False))[None],
+                (i, 0, 0, 0, 0))
+            return (m, l, acc, outbuf), None
+
+        (m, l, acc, outbuf), _ = jax.lax.scan(
+            pair_step, (*init_carry(), outbuf0), (ii, jj, first, last))
+        out = outbuf.transpose(1, 0, 3, 2, 4).reshape(B, nq * bq, H, hd)
+        return out[:, :Sq].astype(q.dtype)
+    else:  # dense
+        def q_block(_, xs):
+            qb, qpb = xs
+            def kv_step(carry, kxs):
+                kb, vb, kpb = kxs
+                return upd(qb, kb, vb, qpb, kpb, carry), None
+            carry, _ = jax.lax.scan(
+                kv_step, init_carry(),
+                (kg.transpose(1, 0, 2, 3, 4), vg.transpose(1, 0, 2, 3, 4),
+                 kp.transpose(1, 0, 2)))
+            return None, carry
+        _, (m, l, acc) = jax.lax.scan(q_block, None, (qg, qp))
+
+    # m, l, acc: (nq, B, H, bq[, hd])
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, nq * bq, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, q_pos, slot_pos, *, attn_softcap=None,
+                     window: Optional[int] = None):
+    """Single-token attention over a cache.
+
+    q: (B, 1, H, hd); caches: (B, S, KV, hd); q_pos: (B,) current position;
+    slot_pos: (B, S) int32 position stored in each slot (-1 = empty).  Works
+    for both full caches (slot i holds position i) and rolling-window caches
+    (slot i holds the latest position = i mod W)."""
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    s = softcap(s, attn_softcap)
+    rel = q_pos[:, None] - slot_pos                     # (B, S)
+    mask = (slot_pos >= 0) & (rel >= 0)
+    if window is not None:
+        mask &= rel < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", (p / l).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cross_attention(q, k, v, media_valid=None):
+    """Full (unmasked) attention onto a small media sequence.
+    q: (B, Sq, H, hd); k, v: (B, M, KV, hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bmkd->bkgqm", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if media_valid is not None:
+        s = jnp.where(media_valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqm,bmkd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ------------------------------ cache utils ------------------------------- #
+
+def write_cache(cache_k, cache_v, slot_pos, k_new, v_new, positions, *,
+                rolling_window: Optional[int] = None):
+    """Scatter new K/V rows into cache slots.
+
+    cache_k/v: (B, S, KV, hd); k_new/v_new: (B, T, KV, hd);
+    positions: (B, T) absolute positions being written.
+    Full cache: slot = position.  Rolling: slot = position % window."""
+    B, S = cache_k.shape[:2]
+    slots = positions % rolling_window if rolling_window else positions
+    b_idx = jnp.arange(B)[:, None]
+    valid = positions >= 0
+    slots_c = jnp.clip(slots, 0, S - 1)
+    sel = valid[..., None, None]
+    cache_k = cache_k.at[b_idx, slots_c].set(
+        jnp.where(sel, k_new.astype(cache_k.dtype),
+                  cache_k[b_idx, slots_c]))
+    cache_v = cache_v.at[b_idx, slots_c].set(
+        jnp.where(sel, v_new.astype(cache_v.dtype),
+                  cache_v[b_idx, slots_c]))
+    slot_pos = slot_pos.at[b_idx, slots_c].set(
+        jnp.where(valid, positions, slot_pos[b_idx, slots_c]))
+    return cache_k, cache_v, slot_pos
+
+
+def prefill_tail(k, v, positions, window: int):
+    """For rolling caches, keep only the last `window` rows before scatter
+    (deterministic; avoids duplicate-index scatter ordering)."""
+    S = k.shape[1]
+    if S <= window:
+        return k, v, positions
+    return k[:, -window:], v[:, -window:], positions[:, -window:]

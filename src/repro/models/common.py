@@ -1,0 +1,98 @@
+"""Shared model building blocks: norms, RoPE, activations, embedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float, *, offset: float = 1.0):
+    """RMSNorm in fp32 accumulate.  gemma-style (1+scale) when offset=1."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (offset + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding, llama half-rotation convention.
+
+    x: (..., S, H, hd);  positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))                  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activate(gate, up, kind: str):
+    """MLP nonlinearity on (gate, up) pair; squared_relu ignores ``up``=None."""
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if kind == "squared_relu":
+        r = jax.nn.relu(gate)
+        return r * r
+    raise ValueError(kind)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def take_embedding(table, tokens, plan):
+    """Embedding lookup; table (V, d) possibly vocab-sharded."""
+    out = jnp.take(table, tokens, axis=0)
+    return plan.constrain(out, ("batch", "seq", None))
+
+
+def chunked_cross_entropy(hidden, head, labels, *, cfg, plan, chunk: int = 512,
+                          mask=None):
+    """Cross-entropy over a large (possibly sharded) vocab without
+    materializing (B, S, V) in fp32: scan over sequence chunks.
+
+    hidden: (B, S, d) bf16;  head: (d, V);  labels: (B, S) int32.
+    Returns (sum_loss, sum_count) so callers can combine across microbatches.
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+    if rem:   # pad to multiple (masked out)
+        pad = chunk - rem
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        n += 1
+    hs = hidden.reshape(B, n, chunk, d).swapaxes(0, 1)      # (n, B, c, d)
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)         # (n, B, c)
+    ms = None if mask is None else mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        h, lab = xs[0], xs[1]
+        m = xs[2] if len(xs) == 3 else (lab >= 0)
+        logits = jnp.einsum("bcd,dv->bcv", h, head.astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = plan.constrain(logits, ("batch", None, "vocab"))
+        if cfg.final_softcap is not None:
+            logits = softcap(logits, cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab_c = jnp.clip(lab, 0, cfg.vocab_size - 1)
+        picked = jnp.take_along_axis(logits, lab_c[..., None], axis=-1)[..., 0]
+        nll = (lse - picked) * m.astype(jnp.float32)
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    xs = (hs, ls) if ms is None else (hs, ls, ms)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return tot, cnt

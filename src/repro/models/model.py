@@ -1,0 +1,416 @@
+"""Unified Model API over the six families.
+
+    model = build_model(cfg, plan)
+    params = model.init(key)
+    hidden, aux = model.forward(params, batch)             # train path
+    logits, cache = model.prefill(params, batch, cache_len)
+    logits, cache = model.decode_step(params, cache, inputs, q_pos)
+
+Batches:
+    dense/moe/ssm/hybrid : {"tokens": (B, S) int32}
+    audio (musicgen)     : {"embeddings": (B, S, media_embed_dim) f32}
+    vlm  (llama3.2-v)    : {"tokens": (B, S), "media": (B, M, media_dim)}
+optional "positions": (B, S) int32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import transformer as tf
+from repro.models.common import rms_norm, softcap
+from repro.sharding import (ParallelPlan, defs_to_shapes, defs_to_specs,
+                            init_from_defs, single_device_plan)
+
+
+def tree_idx(tree, i: int):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _remat(fn, plan: ParallelPlan):
+    if plan.remat == "none":
+        return fn
+    if plan.remat == "dots_saveable":
+        pol = jax.checkpoint_policies.dots_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+def _build_layer_cache(k, v, positions, cache_size, window, dtype):
+    """Scatter prefill K/V into a fresh cache of ``cache_size`` slots."""
+    B, S, KV, hd = k.shape
+    ck = jnp.zeros((B, cache_size, KV, hd), dtype)
+    cv = jnp.zeros((B, cache_size, KV, hd), dtype)
+    sp = jnp.full((B, cache_size), -1, jnp.int32)
+    if window:
+        k, v, positions = attn.prefill_tail(k, v, positions, window)
+    return attn.write_cache(ck, cv, sp, k, v, positions,
+                            rolling_window=window)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    plan: ParallelPlan
+
+    # ------------------------------------------------------------------ #
+    @functools.cached_property
+    def defs(self):
+        return tf.model_defs(self.cfg)
+
+    def param_shapes(self):
+        return defs_to_shapes(self.defs, jnp.dtype(self.cfg.param_dtype))
+
+    def param_specs(self):
+        return defs_to_specs(self.defs, self.plan)
+
+    def init(self, key):
+        return init_from_defs(self.defs, key, jnp.dtype(self.cfg.param_dtype))
+
+    # ------------------------------------------------------------------ #
+    def _embed(self, params, batch):
+        cfg, plan = self.cfg, self.plan
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.embed_inputs:
+            x = jnp.take(params["embed"].astype(dt), batch["tokens"], axis=0)
+        else:
+            x = jnp.einsum("bsm,md->bsd", batch["embeddings"].astype(dt),
+                           params["projector"].astype(dt))
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        return plan.constrain(x, ("batch", "seq", None))
+
+    def _media(self, params, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        return jnp.einsum("bmc,cd->bmd", batch["media"].astype(dt),
+                          params["projector"].astype(dt))
+
+    def logits(self, params, hidden):
+        cfg, plan = self.cfg, self.plan
+        h = rms_norm(hidden, params["final_ln"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        out = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype),
+                         preferred_element_type=jnp.float32)
+        out = plan.constrain(out, ("batch", None, "vocab"))
+        return softcap(out, cfg.final_softcap)
+
+    def final_hidden(self, params, hidden):
+        return rms_norm(hidden, params["final_ln"], self.cfg.norm_eps)
+
+    # ====================== full-sequence forward ====================== #
+    def forward(self, params, batch, *, build_cache=False,
+                cache_len: Optional[int] = None):
+        """Returns (hidden (B,S,d), aux dict, cache-or-None)."""
+        cfg, plan = self.cfg, self.plan
+        x = self._embed(params, batch)
+        B, S = x.shape[:2]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                         (B, S))
+        cache_len = cache_len or S
+        dt = jnp.dtype(cfg.dtype)
+        fam = cfg.family
+        aux: Dict[str, Any] = {}
+        cache = None
+
+        if fam == "ssm":
+            def body(h, p):
+                h, conv_st, ssm_st = tf.mamba_block(p, h, cfg, plan)
+                return h, ((conv_st, ssm_st) if build_cache else None)
+            x, ys = jax.lax.scan(_remat(body, plan), x, params["layers"])
+            if build_cache:
+                conv, ssmst = ys
+                cache = {"conv": conv, "ssm": ssmst,
+                         "pos": positions[:, -1] + 1}
+
+        elif fam == "hybrid":
+            k = cfg.hybrid_period
+            shared = params["shared_attn"]
+            W = None
+
+            def group(h, p_group):
+                def inner(hh, p):
+                    hh, conv_st, ssm_st = tf.mamba_block(p, hh, cfg, plan)
+                    return hh, ((conv_st, ssm_st) if build_cache else None)
+                h, inner_ys = jax.lax.scan(inner, h, p_group)
+                h, kv, _ = tf.dense_block(shared, h, cfg, plan, positions)
+                y = None
+                if build_cache:
+                    ck, cv, sp = _build_layer_cache(kv[0], kv[1], positions,
+                                                    cache_len, W, dt)
+                    y = (inner_ys, {"k": ck, "v": cv, "slot_pos": sp})
+                return h, y
+            x, ys = jax.lax.scan(_remat(group, plan), x, params["layers"])
+            if build_cache:
+                (conv, ssmst), attn_c = ys
+                cache = {"conv": conv, "ssm": ssmst, "attn": attn_c,
+                         "pos": positions[:, -1] + 1}
+
+        elif fam == "vlm":
+            media = self._media(params, batch)
+            kk = cfg.cross_attn_period
+
+            def group(h, xs):
+                p_self, p_cross = xs
+                def inner(hh, p):
+                    hh, kv, _ = tf.dense_block(p, hh, cfg, plan, positions)
+                    if build_cache:
+                        return hh, _build_layer_cache(kv[0], kv[1], positions,
+                                                      cache_len, None, dt)
+                    return hh, None
+                h, self_c = jax.lax.scan(inner, h, p_self)
+                mkv = tf.media_kv_for(p_cross["attn"], media, cfg, plan)
+                h = tf.cross_attn_block(p_cross, h, mkv, cfg, plan)
+                y = None
+                if build_cache:
+                    y = ({"k": self_c[0], "v": self_c[1],
+                          "slot_pos": self_c[2]}, mkv)
+                return h, y
+            x, ys = jax.lax.scan(_remat(group, plan), x,
+                                 (params["layers"], params["cross"]))
+            if build_cache:
+                self_c, mkv = ys
+                cache = {"self": self_c,
+                         "media_k": mkv[0], "media_v": mkv[1],
+                         "pos": positions[:, -1] + 1}
+
+        elif cfg.attention == "local_global":
+            W = cfg.window
+
+            def pair(h, p_pair):
+                p_loc, p_glob = tree_idx(p_pair, 0), tree_idx(p_pair, 1)
+                h, kv_l, _ = tf.dense_block(p_loc, h, cfg, plan, positions,
+                                            window=W, schedule="window")
+                h, kv_g, _ = tf.dense_block(p_glob, h, cfg, plan, positions)
+                y = None
+                if build_cache:
+                    y = (_build_layer_cache(*kv_l, positions, min(cache_len, W),
+                                            W, dt),
+                         _build_layer_cache(*kv_g, positions, cache_len, None,
+                                            dt))
+                return h, y
+            x, ys = jax.lax.scan(_remat(pair, plan), x, params["layers"])
+            if build_cache:
+                (lk, lv, lsp), (gk, gv, gsp) = ys
+                cache = {"local": {"k": lk, "v": lv, "slot_pos": lsp},
+                         "global": {"k": gk, "v": gv, "slot_pos": gsp},
+                         "pos": positions[:, -1] + 1}
+
+        else:  # dense | moe | audio homogeneous
+            W = cfg.window if cfg.attention == "swa" else None
+            sched = "window" if W else None
+
+            def body(h, p):
+                h, kv, aux_l = tf.dense_block(p, h, cfg, plan, positions,
+                                              window=W, schedule=sched)
+                ys_out = []
+                if build_cache:
+                    ys_out.append(_build_layer_cache(
+                        kv[0], kv[1], positions,
+                        min(cache_len, W) if W else cache_len, W, dt))
+                if cfg.is_moe:
+                    ys_out.append(aux_l)
+                return h, tuple(ys_out) if ys_out else None
+            x, ys = jax.lax.scan(_remat(body, plan), x, params["layers"])
+            i = 0
+            if build_cache:
+                ck, cv, sp = ys[i]
+                cache = {"k": ck, "v": cv, "slot_pos": sp,
+                         "pos": positions[:, -1] + 1}
+                i += 1
+            if cfg.is_moe:
+                aux = {k: v.mean() for k, v in ys[i].items()}
+
+        return x, aux, cache
+
+    # ============================ prefill ============================== #
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        hidden, _, cache = self.forward(params, batch, build_cache=True,
+                                        cache_len=cache_len)
+        logits = self.logits(params, hidden[:, -1:])[:, 0]
+        return logits, cache
+
+    # ============================ decode =============================== #
+    def decode_step(self, params, cache, inputs, q_pos):
+        """inputs: {"tokens": (B,1)} or {"embeddings": (B,1,med)};
+        q_pos: (B,) int32 position of the new token.  Returns
+        (logits (B, V) f32, new cache)."""
+        cfg, plan = self.cfg, self.plan
+        x = self._embed(params, inputs)
+        fam = cfg.family
+        new_cache = dict(cache)
+
+        if fam == "ssm":
+            def body(h, xs):
+                p, conv_st, ssm_st = xs
+                h, conv_st, ssm_st = tf.mamba_block(
+                    p, h, cfg, plan, conv_state=conv_st, ssm_state=ssm_st,
+                    decode=True)
+                return h, (conv_st, ssm_st)
+            x, (conv, ssmst) = jax.lax.scan(
+                body, x, (params["layers"], cache["conv"], cache["ssm"]))
+            new_cache.update(conv=conv, ssm=ssmst)
+
+        elif fam == "hybrid":
+            shared = params["shared_attn"]
+
+            def group(h, xs):
+                p_group, conv_g, ssm_g, attn_c = xs
+                def inner(hh, ixs):
+                    p, cs, ss = ixs
+                    hh, cs, ss = tf.mamba_block(p, hh, cfg, plan,
+                                                conv_state=cs, ssm_state=ss,
+                                                decode=True)
+                    return hh, (cs, ss)
+                h, (conv_g, ssm_g) = jax.lax.scan(
+                    inner, h, (p_group, conv_g, ssm_g))
+                h2, attn_c = tf.dense_block_decode(shared, h, cfg, plan,
+                                                   attn_c, q_pos)
+                return h2, (conv_g, ssm_g, attn_c)
+            x, (conv, ssmst, attn_c) = jax.lax.scan(
+                group, x, (params["layers"], cache["conv"], cache["ssm"],
+                           cache["attn"]))
+            new_cache.update(conv=conv, ssm=ssmst, attn=attn_c)
+
+        elif fam == "vlm":
+            def group(h, xs):
+                p_self, p_cross, self_c, mk, mv = xs
+                def inner(hh, ixs):
+                    p, c = ixs
+                    hh, c = tf.dense_block_decode(p, hh, cfg, plan, c, q_pos)
+                    return hh, c
+                h, self_c = jax.lax.scan(inner, h, (p_self, self_c))
+                h = tf.cross_attn_block(p_cross, h, (mk, mv), cfg, plan)
+                return h, self_c
+            x, self_c = jax.lax.scan(
+                group, x, (params["layers"], params["cross"], cache["self"],
+                           cache["media_k"], cache["media_v"]))
+            new_cache.update(self=self_c)
+
+        elif cfg.attention == "local_global":
+            W = cfg.window
+
+            def pair(h, xs):
+                p_pair, c_loc, c_glob = xs
+                h, c_loc = tf.dense_block_decode(tree_idx(p_pair, 0), h, cfg,
+                                                 plan, c_loc, q_pos, window=W)
+                h, c_glob = tf.dense_block_decode(tree_idx(p_pair, 1), h, cfg,
+                                                  plan, c_glob, q_pos)
+                return h, (c_loc, c_glob)
+            x, (c_loc, c_glob) = jax.lax.scan(
+                pair, x, (params["layers"], cache["local"], cache["global"]))
+            new_cache.update(local=c_loc, **{"global": c_glob})
+
+        else:
+            W = cfg.window if cfg.attention == "swa" else None
+
+            def body(h, xs):
+                p, c = xs
+                h, c = tf.dense_block_decode(p, h, cfg, plan, c, q_pos,
+                                             window=W)
+                return h, c
+            layer_cache = {k: cache[k] for k in ("k", "v", "slot_pos")}
+            x, layer_cache = jax.lax.scan(
+                body, x, (params["layers"], layer_cache))
+            new_cache.update(layer_cache)
+
+        new_cache["pos"] = q_pos + 1
+        logits = self.logits(params, x)[:, 0]
+        return logits, new_cache
+
+    # ========================= cache allocation ======================== #
+    def init_cache(self, B: int, cache_len: int):
+        """Zero-initialized cache pytree (as ShapeDtypeStructs when abstract)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        KV, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+        Kc = cfg.ssm_conv - 1
+
+        def kv_cache(n, size):
+            return {"k": jnp.zeros((n, B, size, KV, hd), dt),
+                    "v": jnp.zeros((n, B, size, KV, hd), dt),
+                    "slot_pos": jnp.full((n, B, size), -1, jnp.int32)}
+
+        pos = jnp.zeros((B,), jnp.int32)
+        fam = cfg.family
+        if fam == "ssm":
+            di, N = cfg.d_inner, cfg.ssm_state
+            return {"conv": jnp.zeros((L, B, Kc, di), dt),
+                    "ssm": jnp.zeros((L, B, di, N), jnp.float32), "pos": pos}
+        if fam == "hybrid":
+            di, N = cfg.d_inner, cfg.ssm_state
+            H, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+            g, k = L // cfg.hybrid_period, cfg.hybrid_period
+            return {"conv": jnp.zeros((g, k, B, Kc, di), dt),
+                    "ssm": jnp.zeros((g, k, B, H, P, N), jnp.float32),
+                    "attn": kv_cache(g, cache_len), "pos": pos}
+        if fam == "vlm":
+            g = L // cfg.cross_attn_period
+            k = cfg.cross_attn_period - 1
+            M = cfg.n_media_tokens
+            self_c = {"k": jnp.zeros((g, k, B, cache_len, KV, hd), dt),
+                      "v": jnp.zeros((g, k, B, cache_len, KV, hd), dt),
+                      "slot_pos": jnp.full((g, k, B, cache_len), -1, jnp.int32)}
+            return {"self": self_c,
+                    "media_k": jnp.zeros((g, B, M, KV, hd), dt),
+                    "media_v": jnp.zeros((g, B, M, KV, hd), dt), "pos": pos}
+        if cfg.attention == "local_global":
+            return {"local": kv_cache(L // 2, min(cache_len, cfg.window)),
+                    "global": kv_cache(L // 2, cache_len), "pos": pos}
+        size = min(cache_len, cfg.window) if cfg.attention == "swa" else cache_len
+        out = kv_cache(L, size)
+        out["pos"] = pos
+        return out
+
+    def cache_specs(self):
+        """PartitionSpec pytree matching init_cache output."""
+        plan = self.plan
+
+        def spec_of(path_leaf_ndim):
+            name, ndim = path_leaf_ndim
+            if name in ("k", "v"):        # (L.., B, S, KV, hd)
+                lead = (None,) * (ndim - 4)
+                return plan.spec(lead + ("batch", "kv_seq", "kv_heads", None))
+            if name == "slot_pos":        # (L.., B, S)
+                lead = (None,) * (ndim - 2)
+                return plan.spec(lead + ("batch", "kv_seq"))
+            if name == "conv":            # (L.., B, K-1, di)
+                lead = (None,) * (ndim - 3)
+                return plan.spec(lead + ("batch", None, "inner"))
+            if name == "ssm":             # (L.., B, [di|H,P], N)
+                lead = (None,) * (ndim - 3) if ndim <= 4 else (None,) * (ndim - 4)
+                body = ("batch", "inner", None) if ndim - len(lead) == 3 \
+                    else ("batch", "inner", None, None)
+                return plan.spec(lead + body)
+            if name in ("media_k", "media_v"):
+                lead = (None,) * (ndim - 4)
+                return plan.spec(lead + ("batch", "media", "kv_heads", None))
+            if name == "pos":
+                return plan.spec(("batch",))
+            return plan.spec((None,) * ndim)
+
+        def walk(tree):
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    out[k] = walk(v)
+                else:
+                    out[k] = spec_of((k, v.ndim))
+            return out
+
+        # build from an abstract cache (B=2, len=8 shapes are irrelevant)
+        abstract = jax.eval_shape(lambda: self.init_cache(2, 8))
+        return walk(abstract)
+
+
+def build_model(cfg: ModelConfig, plan: Optional[ParallelPlan] = None) -> Model:
+    return Model(cfg, plan or single_device_plan())

@@ -1,0 +1,239 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD), pure JAX.
+
+Training/prefill uses a *chunked* scan: an outer ``lax.scan`` over time
+chunks carries the SSM state; inside a chunk Mamba1 uses a parallel
+associative scan and Mamba2 uses the quadratic SSD form.  Memory is
+O(chunk * d_inner * d_state) instead of O(seq * d_inner * d_state).
+
+Decode is the O(1) recurrence.  The Pallas twin lives in
+repro.kernels.mamba_scan (validated in interpret mode vs repro.kernels.ref).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rms_norm
+
+
+def causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv.  x: (B, S, C); w: (C, K); b: (C,).
+    state: (B, K-1, C) trailing context from the previous segment (or None).
+    Returns (y, new_state)."""
+    B, S, C = x.shape
+    K = w.shape[1]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)   # (B, S+K-1, C)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for k in range(K):                                         # K is tiny (4)
+        y = y + xp[:, k:k + S].astype(jnp.float32) * w[:, k].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, S:] if S >= K - 1 else xp[:, -(K - 1):]
+    return y.astype(x.dtype), new_state
+
+
+# ----------------------------- Mamba1 ------------------------------------- #
+
+def selective_scan_chunked(u, dt, A, Bmat, Cmat, *, chunk: int = 256,
+                           h0=None):
+    """Mamba1 selective scan.
+
+    u:  (B, S, D)   input (post-conv, post-silu)
+    dt: (B, S, D)   positive step sizes
+    A:  (D, N)      negative-real state matrix
+    Bmat, Cmat: (B, S, N) input/output projections
+    Returns (y: (B, S, D) f32, h_last: (B, D, N) f32).
+    """
+    Bsz, S, D = u.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = u.shape[1] // chunk
+
+    uc = u.reshape(Bsz, nc, chunk, D).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(Bsz, nc, chunk, D).transpose(1, 0, 2, 3)
+    Bc = Bmat.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cc = Cmat.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, D, N), jnp.float32)
+
+    Af = A.astype(jnp.float32)
+
+    def chunk_body(h, xs):
+        u_, dt_, B_, C_ = xs
+        dtf = dt_.astype(jnp.float32)                       # (B, c, D)
+        dA = jnp.exp(dtf[..., None] * Af)                   # (B, c, D, N)
+        dBu = (dtf * u_.astype(jnp.float32))[..., None] * \
+            B_.astype(jnp.float32)[:, :, None, :]           # (B, c, D, N)
+        # include carry as the t=-1 element of the associative scan
+        a = jnp.concatenate([jnp.ones((Bsz, 1, D, N), jnp.float32), dA], axis=1)
+        b = jnp.concatenate([h[:, None], dBu], axis=1)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = hs[:, 1:]                                      # (B, c, D, N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, C_.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_body, h0, (uc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, nc * chunk, D)[:, :S]
+    return y, h_last
+
+
+def selective_scan_step(h, u, dt, A, Bvec, Cvec):
+    """One decode step.  h: (B, D, N) f32; u, dt: (B, D); Bvec, Cvec: (B, N)."""
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A.astype(jnp.float32))       # (B, D, N)
+    dBu = (dtf * u.astype(jnp.float32))[..., None] * \
+        Bvec.astype(jnp.float32)[:, None, :]
+    h = dA * h + dBu
+    y = jnp.einsum("bdn,bn->bd", h, Cvec.astype(jnp.float32))
+    return h, y
+
+
+def mamba1_mix(p, x, cfg, plan, *, conv_state=None, ssm_state=None,
+               decode: bool = False):
+    """Full Mamba1 mixer.  x: (B, S, d_model).  Returns (y, conv_state,
+    ssm_state)."""
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = plan.constrain(xin, ("batch", None, "inner"))
+    xin, conv_state = causal_conv1d(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+    dbc = jnp.einsum("bse,ef->bsf", xin, p["x_proj"].astype(xin.dtype))
+    dt_low, Bmat, Cmat = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_low, p["dt_proj"].astype(xin.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if decode:
+        ssm_state, y = selective_scan_step(
+            ssm_state, xin[:, 0], dt[:, 0], A, Bmat[:, 0], Cmat[:, 0])
+        y = y[:, None]
+    else:
+        y, ssm_state = selective_scan_chunked(
+            xin, dt, A, Bmat, Cmat, chunk=plan_chunk(plan), h0=ssm_state)
+    y = y + xin.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype))
+    return out, conv_state, ssm_state
+
+
+# ----------------------------- Mamba2 (SSD) -------------------------------- #
+
+def ssd_chunked(xh, dt, A, Bmat, Cmat, *, chunk: int = 128, h0=None):
+    """Mamba2 SSD with scalar-per-head decay.
+
+    xh: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
+    Bmat, Cmat: (B, S, N) (shared across heads).
+    Returns (y: (B, S, H, P) f32, h_last: (B, H, P, N) f32)."""
+    Bsz, S, H, Pdim = xh.shape
+    N = Bmat.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // chunk
+    xc = xh.reshape(Bsz, nc, chunk, H, Pdim).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3)
+    Bc = Bmat.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cc = Cmat.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, Pdim, N), jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def chunk_body(h, xs):
+        x_, dt_, B_, C_ = xs
+        dtf = dt_.astype(jnp.float32)                      # (B, c, H)
+        a = dtf * Af                                       # log decay, <= 0
+        cum = jnp.cumsum(a, axis=1)                        # (B, c, H)
+        Bf = B_.astype(jnp.float32)
+        Cf = C_.astype(jnp.float32)
+        xf = x_.astype(jnp.float32)
+        # state -> output:  y_state[t] = exp(cum[t]) * C[t] . h
+        y_state = jnp.exp(cum)[..., None] * \
+            jnp.einsum("bcn,bhpn->bchp", Cf, h)
+        # intra-chunk quadratic form
+        G = jnp.einsum("btn,bsn->bts", Cf, Bf)             # (B, c, c)
+        L = cum[:, :, None, :] - cum[:, None, :, :]        # (B, t, s, H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(L), 0.0)
+        M = G[..., None] * L * dtf[:, None, :, :]          # (B, t, s, H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xf)
+        # chunk state update
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtf            # (B, c, H)
+        h_new = jnp.exp(cum[:, -1])[..., None, None] * h + \
+            jnp.einsum("bch,bcn,bchp->bhpn", w, Bf, xf)
+        return h_new, y_state + y_intra
+
+    h_last, ys = jax.lax.scan(chunk_body, h0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, nc * chunk, H, Pdim)[:, :S]
+    return y, h_last
+
+
+def ssd_step(h, xh, dt, A, Bvec, Cvec):
+    """One decode step.  h: (B, H, P, N); xh: (B, H, P); dt: (B, H);
+    Bvec, Cvec: (B, N)."""
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))              # (B, H)
+    dBx = dtf[..., None, None] * \
+        jnp.einsum("bhp,bn->bhpn", xh.astype(jnp.float32),
+                   Bvec.astype(jnp.float32))
+    h = dA[..., None, None] * h + dBx
+    y = jnp.einsum("bhpn,bn->bhp", h, Cvec.astype(jnp.float32))
+    return h, y
+
+
+def mamba2_mix(p, x, cfg, plan, *, conv_state=None, ssm_state=None,
+               decode: bool = False):
+    """Mamba2 mixer.  x: (B, S, d_model)."""
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, Pdim = cfg.n_ssm_heads, cfg.ssm_head_dim
+    Bsz, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj_xz"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = plan.constrain(xin, ("batch", None, "inner"))
+    bc = jnp.einsum("bsd,de->bse", x, p["in_proj_bc"].astype(x.dtype))
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["in_proj_dt"].astype(x.dtype))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    xin, conv_state = causal_conv1d(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+    xh = xin.reshape(Bsz, S, H, Pdim)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if decode:
+        ssm_state, y = ssd_step(ssm_state, xh[:, 0], dt[:, 0], A,
+                                Bmat[:, 0], Cmat[:, 0])
+        y = y[:, None]
+    else:
+        y, ssm_state = ssd_chunked(xh, dt, A, Bmat, Cmat,
+                                   chunk=min(128, plan_chunk(plan)),
+                                   h0=ssm_state)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, S, di)
+    # gated RMSNorm (mamba2) then output projection
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                 p["norm"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype))
+    return out, conv_state, ssm_state
+
+
+def plan_chunk(plan) -> int:
+    return getattr(plan, "ssm_chunk", 256)

@@ -1,0 +1,322 @@
+"""Decoder stacks for all six families (dense / moe / ssm / hybrid / audio /
+vlm), built from ``lax.scan`` over stacked layer params.
+
+Structure per family (scan segments):
+  dense, moe, audio : scan over L homogeneous blocks
+  gemma2 (local_global): scan over L/2 (local, global) pairs
+  ssm               : scan over L mamba1 blocks
+  hybrid (zamba2)   : scan over L/k groups = k mamba2 blocks (inner scan)
+                      + one *shared-weight* attention block per group
+  vlm (llama3.2-v)  : scan over L/k groups = (k-1) self blocks (inner scan)
+                      + one cross-attn block per group
+
+Each forward exists in three modes:
+  train/prefill : full-sequence, returns hidden states (+ cache when asked)
+  decode        : one token, cache as scan xs/ys
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.common import activate, rms_norm, rope, softcap
+from repro.models.moe import moe_ffn
+from repro.sharding import ParamDef, ParallelPlan, stack_defs
+
+
+# =========================== parameter definitions ========================= #
+
+def attn_defs(cfg, *, cross: bool = False) -> Dict[str, ParamDef]:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = {
+        "wq": ParamDef((d, H * hd), ("embed", "heads")),
+        "wk": ParamDef((d, KV * hd), ("embed", "kv")),
+        "wv": ParamDef((d, KV * hd), ("embed", "kv")),
+        "wo": ParamDef((H * hd, d), ("heads", "embed"), init="scaled"),
+    }
+    if cfg.qk_norm or cross:
+        out["q_norm"] = ParamDef((hd,), (None,), init="zeros")
+        out["k_norm"] = ParamDef((hd,), (None,), init="zeros")
+    return out
+
+
+def mlp_defs(cfg) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    out = {"w1": ParamDef((d, f), ("embed", "ff")),
+           "w2": ParamDef((f, d), ("ff", "embed"), init="scaled")}
+    if cfg.activation in ("swiglu", "geglu"):
+        out["w3"] = ParamDef((d, f), ("embed", "ff"))
+    return out
+
+
+def block_defs(cfg, *, moe: bool = False) -> Dict[str, Any]:
+    d = cfg.d_model
+    out: Dict[str, Any] = {
+        "ln1": ParamDef((d,), (None,), init="zeros"),
+        "attn": attn_defs(cfg),
+        "ln2": ParamDef((d,), (None,), init="zeros"),
+    }
+    if cfg.post_norms:
+        out["ln1p"] = ParamDef((d,), (None,), init="zeros")
+        out["ln2p"] = ParamDef((d,), (None,), init="zeros")
+    if moe:
+        E, f = cfg.n_experts, cfg.d_ff
+        # "ff_expert" resolves to the model axis when expert-parallelism is
+        # impossible (n_experts not divisible by the model degree, e.g.
+        # mixtral's 8 experts on a 16-way axis => TP-within-expert instead)
+        out["moe"] = {
+            "router": ParamDef((d, E), ("embed", None)),
+            "w1": ParamDef((E, d, f), ("experts", "embed", "ff_expert")),
+            "w3": ParamDef((E, d, f), ("experts", "embed", "ff_expert")),
+            "w2": ParamDef((E, f, d), ("experts", "ff_expert", "embed"),
+                           init="scaled"),
+        }
+    else:
+        out["mlp"] = mlp_defs(cfg)
+    return out
+
+
+def cross_block_defs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDef((d,), (None,), init="zeros"),
+        "attn": attn_defs(cfg, cross=True),
+        "gate_attn": ParamDef((), (), init="zeros"),
+        "ln2": ParamDef((d,), (None,), init="zeros"),
+        "mlp": mlp_defs(cfg),
+        "gate_mlp": ParamDef((), (), init="zeros"),
+    }
+
+
+def mamba_defs(cfg) -> Dict[str, Any]:
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    out: Dict[str, Any] = {
+        "ln": ParamDef((d,), (None,), init="zeros"),
+        "conv_w": ParamDef((di, K), ("inner", None), init="scaled"),
+        "conv_b": ParamDef((di,), ("inner",), init="zeros"),
+        "out_proj": ParamDef((di, d), ("inner", "embed"), init="scaled"),
+    }
+    if cfg.ssm_version == 1:
+        R = cfg.dt_rank
+        out.update({
+            "in_proj": ParamDef((d, 2 * di), ("embed", "inner")),
+            "x_proj": ParamDef((di, R + 2 * N), ("inner", None)),
+            "dt_proj": ParamDef((R, di), (None, "inner")),
+            "dt_bias": ParamDef((di,), ("inner",), init="const", const=-4.0),
+            "A_log": ParamDef((di, N), ("inner", None), init="const", const=0.0),
+            "D": ParamDef((di,), ("inner",), init="ones"),
+        })
+    else:
+        H = cfg.n_ssm_heads
+        out.update({
+            "in_proj_xz": ParamDef((d, 2 * di), ("embed", "inner")),
+            "in_proj_bc": ParamDef((d, 2 * N), ("embed", None)),
+            "in_proj_dt": ParamDef((d, H), ("embed", "inner")),
+            "dt_bias": ParamDef((H,), ("inner",), init="const", const=-4.0),
+            "A_log": ParamDef((H,), ("inner",), init="const", const=0.0),
+            "D": ParamDef((H,), ("inner",), init="ones"),
+            "norm": ParamDef((di,), ("inner",), init="zeros"),
+        })
+    return out
+
+
+def model_defs(cfg) -> Dict[str, Any]:
+    """Full parameter-definition pytree for an architecture."""
+    d, L = cfg.d_model, cfg.n_layers
+    out: Dict[str, Any] = {"final_ln": ParamDef((d,), (None,), init="zeros")}
+    if cfg.embed_inputs:
+        out["embed"] = ParamDef((cfg.vocab_size, d), ("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        out["head"] = ParamDef((d, cfg.vocab_size), ("embed", "vocab"),
+                               init="scaled")
+    if cfg.media_embed_dim:
+        out["projector"] = ParamDef((cfg.media_embed_dim, d), (None, "embed"),
+                                    init="scaled")
+
+    fam = cfg.family
+    if fam == "ssm":
+        out["layers"] = stack_defs(mamba_defs(cfg), L)
+    elif fam == "hybrid":
+        k = cfg.hybrid_period
+        assert L % k == 0
+        out["layers"] = stack_defs(stack_defs(mamba_defs(cfg), k), L // k)
+        out["shared_attn"] = block_defs(cfg)            # one shared block
+    elif fam == "vlm":
+        k = cfg.cross_attn_period
+        assert L % k == 0
+        g = L // k
+        out["layers"] = stack_defs(stack_defs(block_defs(cfg), k - 1), g)
+        out["cross"] = stack_defs(cross_block_defs(cfg), g)
+    else:  # dense | moe | audio
+        defs = block_defs(cfg, moe=cfg.is_moe)
+        if cfg.attention == "local_global":
+            assert L % 2 == 0
+            out["layers"] = stack_defs(stack_defs(defs, 2), L // 2)
+        else:
+            out["layers"] = stack_defs(defs, L)
+    return out
+
+
+# ============================ block forwards =============================== #
+
+def _qkv(p, x, cfg, plan, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # column-parallel projections (explicit g all-gather under
+    # tp_mode="shard_map"; identical XLA CSEs the repeated gathers)
+    q = plan.col_parallel_project(x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype)).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype)).reshape(B, S, KV, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = plan.constrain(q, ("batch", None, "heads", None))
+    # K/V activations keep their KV heads REPLICATED across the model axis:
+    # KV (e.g. 8) rarely divides the TP degree (16), and the flash loop
+    # repeats them to H per block anyway — padding/resharding a KV-sharded
+    # tensor on every attention block measured far worse.
+    k = plan.constrain(k, ("batch", None, None, None))
+    v = plan.constrain(v, ("batch", None, None, None))
+    return q, k, v
+
+
+def self_attention_block(p, x, cfg, plan, positions, *, window=None,
+                         schedule=None):
+    """Pre-norm attention sub-block (full sequence).  Returns (y, (k, v))."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p["attn"], h, cfg, plan, positions)
+    sched = schedule or ("window" if window is not None else plan.attention_schedule)
+    # positions are tiny (B, S) i32 — replicate them so the per-block mask
+    # math inside the flash loop stays device-local (seq-sharded positions
+    # measured as x6080 pred/s32 reshards on deepseek train_4k)
+    positions = plan.constrain(positions, ("batch", None))
+    o = attn.flash_attention(q, k, v, positions, positions, causal=True,
+                             window=window, attn_softcap=cfg.attn_softcap,
+                             schedule=sched)
+    B, S = x.shape[:2]
+    # row-parallel output projection: GSPMD einsum + constraint, or explicit
+    # shard_map psum_scatter (plan.tp_mode) — see EXPERIMENTS.md §Perf
+    o = plan.row_parallel_project(
+        o.reshape(B, S, cfg.n_heads * cfg.head_dim), p["attn"]["wo"])
+    if cfg.post_norms:
+        o = rms_norm(o, p["ln1p"], cfg.norm_eps)
+    return o, (k, v)
+
+
+def mlp_block(p, x, cfg, plan):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    g = plan.col_parallel_project(h, p["mlp"]["w1"])
+    g = plan.constrain(g, ("batch", None, "ff"))
+    u = None
+    if "w3" in p["mlp"]:
+        u = plan.col_parallel_project(h, p["mlp"]["w3"])
+    a = activate(g, u, cfg.activation)
+    o = plan.row_parallel_project(a, p["mlp"]["w2"])
+    if cfg.post_norms:
+        o = rms_norm(o, p["ln2p"], cfg.norm_eps)
+    return o
+
+
+def dense_block(p, x, cfg, plan, positions, *, window=None, schedule=None,
+                valid=None):
+    """Full transformer block.  Returns (x_out, kv, aux)."""
+    o, kv = self_attention_block(p, x, cfg, plan, positions, window=window,
+                                 schedule=schedule)
+    x = plan.constrain(x + o, ("batch", "seq", None))
+    if cfg.is_moe and "moe" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, aux = moe_ffn(p["moe"], h, cfg, plan, valid=valid)
+        if cfg.post_norms:
+            y = rms_norm(y, p["ln2p"], cfg.norm_eps)
+    else:
+        y = mlp_block(p, x, cfg, plan)
+        aux = None
+    x = plan.constrain(x + y, ("batch", "seq", None))
+    return x, kv, aux
+
+
+def cross_attn_block(p, x, media_kv, cfg, plan, *, media_valid=None):
+    """Gated cross-attention block (llama-3.2-vision / musicgen-cond style)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wq"].astype(h.dtype))
+    q = q.reshape(B, S, H, hd)
+    if "q_norm" in p["attn"]:
+        q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+    k, v = media_kv
+    o = attn.cross_attention(q, k, v, media_valid)
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * hd),
+                   p["attn"]["wo"].astype(o.dtype))
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * o
+    y = mlp_block(p, x, cfg, plan)
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * y
+    return plan.constrain(x, ("batch", "seq", None))
+
+
+def media_kv_for(p_attn, media, cfg, plan):
+    """Precompute cross-attn K/V from projected media embeddings."""
+    B, M, _ = media.shape
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = jnp.einsum("bmd,dh->bmh", media, p_attn["wk"].astype(media.dtype))
+    k = k.reshape(B, M, KV, hd)
+    if "k_norm" in p_attn:
+        k = rms_norm(k, p_attn["k_norm"], cfg.norm_eps)
+    v = jnp.einsum("bmd,dh->bmh", media, p_attn["wv"].astype(media.dtype))
+    v = v.reshape(B, M, KV, hd)
+    k = plan.constrain(k, ("batch", "media", "kv", None))
+    v = plan.constrain(v, ("batch", "media", "kv", None))
+    return k, v
+
+
+def mamba_block(p, x, cfg, plan, *, conv_state=None, ssm_state=None,
+                decode=False):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    mix = ssm_mod.mamba1_mix if cfg.ssm_version == 1 else ssm_mod.mamba2_mix
+    y, conv_state, ssm_state = mix(p, h, cfg, plan, conv_state=conv_state,
+                                   ssm_state=ssm_state, decode=decode)
+    x = plan.constrain(x + y, ("batch", "seq", None))
+    return x, conv_state, ssm_state
+
+
+# ============================ decode sub-blocks ============================ #
+
+def attn_block_decode(p, x, cfg, plan, cache, q_pos, *, window=None):
+    """One-token attention block against a cache slice.
+
+    cache: dict(k: (B,S,KV,hd), v, slot_pos: (B,S)).  Returns (y, cache)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    positions = q_pos[:, None]
+    q, k_new, v_new = _qkv(p["attn"], h, cfg, plan, positions)
+    ck, cv, sp = attn.write_cache(cache["k"], cache["v"], cache["slot_pos"],
+                                  k_new, v_new, positions,
+                                  rolling_window=window)
+    o = attn.decode_attention(q, ck, cv, q_pos, sp,
+                              attn_softcap=cfg.attn_softcap, window=window)
+    B = x.shape[0]
+    o = jnp.einsum("bsh,hd->bsd",
+                   o.reshape(B, 1, cfg.n_heads * cfg.head_dim),
+                   p["attn"]["wo"].astype(o.dtype))
+    if cfg.post_norms:
+        o = rms_norm(o, p["ln1p"], cfg.norm_eps)
+    return o, {"k": ck, "v": cv, "slot_pos": sp}
+
+
+def dense_block_decode(p, x, cfg, plan, cache, q_pos, *, window=None):
+    o, cache = attn_block_decode(p, x, cfg, plan, cache, q_pos, window=window)
+    x = x + o
+    if cfg.is_moe and "moe" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, _ = moe_ffn(p["moe"], h, cfg, plan)
+        if cfg.post_norms:
+            y = rms_norm(y, p["ln2p"], cfg.norm_eps)
+    else:
+        y = mlp_block(p, x, cfg, plan)
+    return x + y, cache

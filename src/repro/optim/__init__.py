@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, OptState  # noqa: F401
+from repro.optim.compression import GradCompression  # noqa: F401
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401

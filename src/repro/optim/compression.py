@@ -1,0 +1,73 @@
+"""Gradient compression with error feedback (distributed-optimization
+substrate).
+
+Cross-pod gradient reduction is the one unavoidable inter-pod collective in
+the default train plan (EXPERIMENTS.md §Perf); compressing it is the
+classic lever.  Modes:
+
+  bf16  : round-to-bf16 (2x wire)           — negligible quality impact
+  int8  : per-tensor max-abs int8 (4x wire) — needs error feedback
+
+Error feedback (Seide et al. / Karimireddy et al.): the quantization
+residual is carried in optimizer state and added to the next step's
+gradient, making the *accumulated* compressed gradient unbiased — without
+it, int8 stalls below the quantization floor.
+
+On real hardware the int8 path pairs with a shard_map ring that reduces in
+int8 with per-hop requantization; on the CPU dry-run we provide the numerics
+layer (quantize -> [reduce] -> dequantize + EF), which is bit-equivalent to
+wire compression under fp-accumulate reductions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompression:
+    mode: str = "none"            # none | bf16 | int8
+    error_feedback: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+    def init(self, params) -> Any:
+        if not (self.enabled and self.error_feedback):
+            return None
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def _q(self, g: jnp.ndarray) -> jnp.ndarray:
+        if self.mode == "bf16":
+            return g.astype(jnp.bfloat16).astype(jnp.float32)
+        if self.mode == "int8":
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127)
+            return q * scale
+        return g
+
+    def apply(self, grads, err) -> Tuple[Any, Any]:
+        """Returns (compressed grads, new error buffers)."""
+        if not self.enabled:
+            return grads, err
+        if err is None:
+            comp = jax.tree_util.tree_map(
+                lambda g: self._q(g.astype(jnp.float32)), grads)
+            return comp, None
+
+        def one(g, e):
+            acc = g.astype(jnp.float32) + e
+            q = self._q(acc)
+            return q, acc - q
+
+        pairs = jax.tree_util.tree_map(one, grads, err)
+        comp = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        return comp, new_err

@@ -1,0 +1,23 @@
+"""LR schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, s / max(1, warmup_steps))
+    return f
+
+
+def cosine_schedule(peak: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak * jnp.minimum(1.0, s / max(1, warmup_steps))
+        prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, peak * cos)
+    return f

@@ -1,0 +1,2 @@
+from repro.runtime.steps import (TrainState, make_loss_fn, make_train_step,
+                                 make_prefill_step, make_decode_step)  # noqa: F401

@@ -1,0 +1,102 @@
+"""Step builders: training loss/step, prefill, decode.
+
+``make_train_step`` supports gradient accumulation (plan.microbatch > 1) via
+a lax.scan over microbatches — this is one of the discrete "resource"
+dimensions the RAQO sharding planner climbs (it trades activation memory
+against step latency).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import chunked_cross_entropy
+from repro.models.moe import moe_aux_total
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def make_loss_fn(model):
+    cfg, plan = model.cfg, model.plan
+
+    def loss_fn(params, batch):
+        hidden, aux, _ = model.forward(params, batch)
+        h = model.final_hidden(params, hidden)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        labels = batch["labels"]
+        tot, cnt = chunked_cross_entropy(h, head, labels, cfg=cfg, plan=plan)
+        ce = tot / jnp.maximum(cnt, 1.0)
+        loss = ce
+        metrics = {"ce": ce, "tokens": cnt}
+        if cfg.is_moe and aux:
+            loss = loss + moe_aux_total(aux, cfg)
+            metrics.update({k: v for k, v in aux.items()})
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def _split_microbatches(batch, n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"global batch {b} % microbatch {n} != 0"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(model, optimizer):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = make_loss_fn(model)
+    plan = model.plan
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if plan.microbatch > 1:
+            mb = _split_microbatches(batch, plan.microbatch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mbatch):
+                g_acc = carry
+                g, m = grad_fn(params, mbatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, m
+
+            grads, ms = jax.lax.scan(acc, zeros, mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / plan.microbatch, grads)
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+        else:
+            grads, metrics = grad_fn(params, batch)
+        new_params, opt_state, opt_m = optimizer.update(
+            grads, state.opt_state, params)
+        metrics.update(opt_m)
+        return TrainState(new_params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(model, cache_len: Optional[int] = None):
+    def prefill(params, batch):
+        return model.prefill(params, batch, cache_len=cache_len)
+    return prefill
+
+
+def make_decode_step(model):
+    def decode(params, cache, inputs, q_pos):
+        return model.decode_step(params, cache, inputs, q_pos)
+    return decode
+
+
+def init_train_state(model, optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))

@@ -1,0 +1,294 @@
+"""Logical-axis sharding: parallelism plans -> PartitionSpec rules.
+
+Model code annotates tensors with *logical* axis names ("batch", "seq",
+"embed", "heads", "kv", "ff", "experts", "vocab", "inner", ...).  A
+``ParallelPlan`` maps logical names to mesh axes, giving DP / TP / SP /
+FSDP(ZeRO) / EP as pure rule-sets.  This is the "query plan" half of RAQO's
+joint (plan, resource) output: the sharding planner (repro.core.
+sharding_planner) searches over ParallelPlans x mesh shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisAssignment = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """A parallelism 'query plan' for one (arch x shape).
+
+    rules: logical axis name -> mesh axis (or tuple of mesh axes, or None).
+    When ``enabled`` is False every constraint is the identity (single-device
+    smoke tests).
+    """
+    name: str = "single"
+    rules: Tuple[Tuple[str, AxisAssignment], ...] = ()
+    enabled: bool = False
+    remat: str = "nothing_saveable"   # nothing_saveable | dots_saveable | none
+    microbatch: int = 1               # gradient-accumulation steps
+    scan_layers: bool = True
+    seq_shard: bool = True            # Megatron-SP residual stream
+    attention_schedule: str = "dense" # dense | causal_skip  (flash block schedule)
+    moe_group_size: int = 2048
+    moe_target_groups: int = 1        # aim for >= this many groups (mesh size)
+    ssm_chunk: int = 256              # selective-scan chunk length
+    # tp_mode="shard_map": explicit Megatron g-bar for row-parallel
+    # projections — psum_scatter in bf16 via shard_map instead of trusting
+    # GSPMD (XLA-CPU's f32 dot normalization blocks its reduce-scatter
+    # pattern; see EXPERIMENTS.md §Perf iteration 3)
+    tp_mode: str = "gspmd"            # gspmd | shard_map
+    mesh: Any = None                  # required for tp_mode="shard_map"
+    pipeline_stages: int = 1          # >1 => GPipe over the 'pod' axis
+
+    def rule(self, logical: Optional[str]) -> AxisAssignment:
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        return P(*[self.rule(a) for a in logical_axes])
+
+    def constrain(self, x, logical_axes: Sequence[Optional[str]]):
+        """with_sharding_constraint under a plan; identity when disabled."""
+        if not self.enabled:
+            return x
+        assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+        return jax.lax.with_sharding_constraint(x, self.spec(logical_axes))
+
+    def with_(self, **kw) -> "ParallelPlan":
+        return dataclasses.replace(self, **kw)
+
+    # ---------------- explicit-collective TP projection ---------------- #
+    def row_parallel_project(self, x, w, *, fsdp_gather_axis: str = "data"):
+        """y = x @ w with the contraction dim sharded over 'model'.
+
+        tp_mode="gspmd": plain einsum + seq-sharded constraint (GSPMD picks
+        the collectives).  tp_mode="shard_map": explicit Megatron g-bar —
+        local partial matmul, bf16 psum_scatter over 'model' onto the
+        sequence dim; FSDP weight columns all-gathered over 'data' locally.
+        x: (B, S, k_local_total); w: (K, d) sharded (model, data)."""
+        import jax.numpy as jnp
+        if self.tp_mode != "shard_map" or self.mesh is None:
+            y = jnp.einsum("bsk,kd->bsd", x, w.astype(x.dtype))
+            return self.constrain(y, ("batch", "seq", None))
+        from jax import shard_map
+        mesh = self.mesh
+        axes = tuple(mesh.axis_names)
+        data_axes = tuple(a for a in axes if a in ("pod", "data"))
+        batch_spec = data_axes if len(data_axes) != 1 else data_axes[0]
+
+        def local(xl, wl):
+            # wl: (K/tp, d/fsdp) -> gather FSDP columns (device-local rows);
+            # cast BEFORE the gather so both the gather and its transpose
+            # (grad psum_scatter) move bf16, not f32
+            wl = wl.astype(xl.dtype)
+            if "data" in axes and mesh.shape["data"] > 1 and \
+                    self.rule("embed") is not None:
+                wl = jax.lax.all_gather(wl, "data", axis=1, tiled=True)
+            part = jnp.einsum("bsk,kd->bsd", xl, wl)
+            # reduce-scatter over model onto the sequence dim, in the
+            # activation dtype (bf16 in production — halves wire bytes)
+            return jax.lax.psum_scatter(part.astype(xl.dtype), "model",
+                                        scatter_dimension=1, tiled=True)
+
+        w_spec = P("model", self.rule("embed"))
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(P(batch_spec, None, "model"), w_spec),
+            out_specs=P(batch_spec, "model", None))(x, w)
+
+    def col_parallel_project(self, x, w):
+        """y = x @ w with the OUTPUT dim sharded over 'model' (Megatron g):
+        the sequence-sharded input is all-gathered inside shard_map, so its
+        autodiff transpose is a forced psum_scatter of the cotangent —
+        GSPMD's pattern-matching equivalent is defeated by XLA-CPU's f32
+        dot normalization.  x: (B, S, d) seq-sharded; w: (d, F)."""
+        import jax.numpy as jnp
+        if self.tp_mode != "shard_map" or self.mesh is None:
+            return jnp.einsum("bsd,df->bsf", x, w.astype(x.dtype))
+        from jax import shard_map
+        mesh = self.mesh
+        axes = tuple(mesh.axis_names)
+        data_axes = tuple(a for a in axes if a in ("pod", "data"))
+        batch_spec = data_axes if len(data_axes) != 1 else data_axes[0]
+
+        def local(xl, wl):
+            wl = wl.astype(xl.dtype)
+            if "data" in axes and mesh.shape["data"] > 1 and \
+                    self.rule("embed") is not None:
+                wl = jax.lax.all_gather(wl, "data", axis=0, tiled=True)
+            xf = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+            return jnp.einsum("bsd,df->bsf", xf, wl)
+
+        w_spec = P(self.rule("embed"), "model")
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(P(batch_spec, "model", None), w_spec),
+            out_specs=P(batch_spec, None, "model"))(x, w)
+
+
+# --------------------------------------------------------------------------- #
+# Canonical plans.  Mesh axes: ("pod", "data", "model") multi-pod,
+# ("data", "model") single pod.
+# --------------------------------------------------------------------------- #
+
+def _base_rules(data_axes: Tuple[str, ...], fsdp: Tuple[str, ...],
+                model: str, seq_shard: bool) -> Tuple[Tuple[str, AxisAssignment], ...]:
+    return (
+        ("batch",   data_axes if len(data_axes) != 1 else data_axes[0]),
+        ("seq",     model if seq_shard else None),      # residual-stream SP
+        ("kv_seq",  model),                             # decode cache sequence shard
+        ("kv_heads", None),                             # cache KV-head dim (seq takes 'model')
+        ("tokens",  data_axes + (model,)),              # MoE pre-dispatch groups
+        ("embed",   fsdp if len(fsdp) != 1 else (fsdp[0] if fsdp else None)),
+        ("heads",   model),
+        ("kv",      model),
+        ("ff",      model),
+        ("inner",   model),                             # mamba d_inner
+        ("experts", model),
+        ("ff_expert", None),        # flips to `model` when EP impossible
+        ("vocab",   model),
+        ("media",   None),
+        ("state",   None),
+    )
+
+
+def moe_rules_for(plan: "ParallelPlan", n_experts: int,
+                  model_size: int) -> "ParallelPlan":
+    """Resolve expert sharding: EP over the model axis when divisible,
+    otherwise TP-within-expert (shard the expert FFN dim)."""
+    if n_experts % model_size == 0:
+        return plan
+    rules = tuple(
+        (k, (None if k == "experts" else "model" if k == "ff_expert" else v))
+        for k, v in plan.rules)
+    return plan.with_(rules=rules)
+
+
+def train_plan(mesh_axes: Sequence[str], *, fsdp: bool = True,
+               seq_shard: bool = True, remat: str = "nothing_saveable",
+               microbatch: int = 1, name: str = "") -> ParallelPlan:
+    """Default training plan: DP over (pod,data), TP over model, Megatron-SP
+    residuals, FSDP(ZeRO) param rows over data."""
+    mesh_axes = tuple(mesh_axes)
+    data_axes = tuple(a for a in mesh_axes if a in ("pod", "data"))
+    fsdp_axes = ("data",) if fsdp and "data" in mesh_axes else ()
+    return ParallelPlan(
+        name=name or ("train_dp_tp_sp" + ("_fsdp" if fsdp else "")),
+        rules=_base_rules(data_axes, fsdp_axes, "model", seq_shard),
+        enabled=True,
+        remat=remat,
+        microbatch=microbatch,
+        seq_shard=seq_shard,
+    )
+
+
+def serve_plan(mesh_axes: Sequence[str], *, global_batch: int,
+               weight_mode: str = "stationary", name: str = "") -> ParallelPlan:
+    """Serving plan.  KV cache: batch over data axes (when divisible),
+    sequence over 'model' (flash-decoding / context parallelism).  Weights:
+      stationary : params sharded over 'model' only (no per-layer gather)
+      gathered   : params 2-D sharded (model x data), all-gathered per layer
+                   -- the 'broadcast-join'-style alternative RAQO picks from.
+    For batch < #data shards (long-context b=1) batch is left unsharded and
+    the cache sequence is sharded over (data, model)."""
+    mesh_axes = tuple(mesh_axes)
+    data_axes = tuple(a for a in mesh_axes if a in ("pod", "data"))
+    small_batch = global_batch < 16   # long-context: leave batch unsharded
+    batch_assign: AxisAssignment = None if small_batch else (
+        data_axes if len(data_axes) != 1 else data_axes[0])
+    kv_seq_assign: AxisAssignment = (data_axes + ("model",)) if small_batch else "model"
+    fsdp_axes: Tuple[str, ...] = ("data",) if weight_mode == "gathered" else ()
+    rules = (
+        ("batch",   batch_assign),
+        ("seq",     None),
+        ("kv_seq",  kv_seq_assign),
+        ("kv_heads", None),
+        ("tokens",  data_axes + ("model",) if not small_batch else None),
+        ("embed",   fsdp_axes[0] if fsdp_axes else None),
+        ("heads",   "model"),
+        ("kv",      "model"),
+        ("ff",      "model"),
+        ("inner",   "model"),
+        ("experts", "model"),
+        ("ff_expert", None),
+        ("vocab",   "model"),
+        ("media",   None),
+        ("state",   None),
+    )
+    return ParallelPlan(
+        name=name or f"serve_{weight_mode}",
+        rules=rules,
+        enabled=True,
+        remat="none",
+        seq_shard=False,
+    )
+
+
+def single_device_plan() -> ParallelPlan:
+    return ParallelPlan(name="single", enabled=False, remat="none", seq_shard=False)
+
+
+# --------------------------------------------------------------------------- #
+# Param definitions: single source of truth for shapes, logical axes, init.
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | scaled | const
+    scale: float = 0.02
+    const: float = 0.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def stack_defs(tree, n: int):
+    """Prepend a stacked-layers dim of size n to every ParamDef leaf."""
+    def f(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(d, shape=(n,) + d.shape, logical=(None,) + d.logical)
+    return jax.tree_util.tree_map(f, tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def defs_to_specs(defs, plan: ParallelPlan):
+    return jax.tree_util.tree_map(
+        lambda d: plan.spec(d.logical), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def defs_to_shapes(defs, dtype):
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_from_defs(defs, key, dtype):
+    """Materialize params from defs (host-side; used by smoke tests/examples)."""
+    import jax.numpy as jnp
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        elif d.init == "const":
+            out.append(jnp.full(d.shape, d.const, dtype))
+        elif d.init == "scaled":   # fan-in scaled
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            out.append(jax.random.normal(k, d.shape, dtype) * (fan_in ** -0.5))
+        else:
+            out.append(jax.random.normal(k, d.shape, dtype) * d.scale)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set XLA_FLAGS / device counts here — smoke tests and benches
+# must see the real single CPU device.  Multi-device tests spawn
+# subprocesses with their own XLA_FLAGS (see test_dryrun_small.py).

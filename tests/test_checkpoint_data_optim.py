@@ -1,0 +1,148 @@
+"""Substrate tests: checkpoint manager, data pipeline, optimizer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import REGISTRY
+from repro.data import SyntheticPipeline
+from repro.optim import AdamW, cosine_schedule, linear_warmup
+from repro.optim.adamw import global_norm
+
+
+# ------------------------------ checkpoint --------------------------------- #
+
+def _state():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "opt": {"m": jnp.ones((3, 4)), "step": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2)
+    s = _state()
+    cm.save(10, s, extras={"data_step": 10})
+    restored, extras = cm.restore(jax.tree_util.tree_map(jnp.zeros_like, s))
+    assert extras["data_step"] == 10
+    for a, b in zip(jax.tree_util.tree_leaves(s),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_gc(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2)
+    for step in (1, 2, 3, 4):
+        cm.save(step, _state())
+    assert cm.steps() == [3, 4]
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=3)
+    cm.save(1, _state())
+    assert not [p for p in os.listdir(tmp_path) if p.startswith(".tmp")]
+
+
+def test_restore_specific_step_and_mismatch(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    cm.save(1, _state())
+    cm.save(2, {"w": jnp.zeros((3, 4)),
+                "opt": {"m": jnp.zeros((3, 4)), "step": jnp.int32(0)}})
+    r, _ = cm.restore(_state(), step=1)
+    assert float(jax.tree_util.tree_leaves(r)[0][0, 1]) == 1.0
+    with pytest.raises(ValueError):
+        cm.restore({"only": jnp.zeros(())})
+
+
+def test_async_save(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    cm.save(5, _state(), async_=True)
+    cm.wait()
+    assert cm.latest_step() == 5
+
+
+# ------------------------------ data pipeline ------------------------------ #
+
+def test_pipeline_deterministic():
+    cfg = REGISTRY["smollm-360m"].smoke()
+    p = SyntheticPipeline(cfg, 4, 64, seed=3)
+    a, b = p.batch_at(17), p.batch_at(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = p.batch_at(18)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_pipeline_label_shift():
+    cfg = REGISTRY["smollm-360m"].smoke()
+    p = SyntheticPipeline(cfg, 2, 32, seed=0)
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (2, 32) and b["labels"].shape == (2, 32)
+    assert (b["tokens"] < cfg.vocab_size).all()
+    assert (b["labels"] >= 0).all()
+
+
+def test_pipeline_host_sharding():
+    cfg = REGISTRY["smollm-360m"].smoke()
+    h0 = SyntheticPipeline(cfg, 8, 32, seed=0, host_id=0, host_count=2)
+    h1 = SyntheticPipeline(cfg, 8, 32, seed=0, host_id=1, host_count=2)
+    a, b = h0.batch_at(0), h1.batch_at(0)
+    assert a["tokens"].shape == (4, 32)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_pipeline_families():
+    for arch in ("musicgen-medium", "llama-3.2-vision-11b"):
+        cfg = REGISTRY[arch].smoke()
+        b = SyntheticPipeline(cfg, 2, 16, seed=0).batch_at(0)
+        if not cfg.embed_inputs:
+            assert b["embeddings"].shape == (2, 16, cfg.media_embed_dim)
+        if cfg.family == "vlm":
+            assert b["media"].shape == (2, cfg.n_media_tokens,
+                                        cfg.media_embed_dim)
+
+
+def test_pipeline_prefetch_iterator():
+    cfg = REGISTRY["smollm-360m"].smoke()
+    p = SyntheticPipeline(cfg, 2, 16, seed=0)
+    it = p.iterate(start_step=5)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], p.batch_at(5)["tokens"])
+
+
+# ------------------------------ optimizer ---------------------------------- #
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+
+    def loss_grad(p):
+        return {"x": 2 * (p["x"] - jnp.array([1.0, 2.0]))}
+    for _ in range(200):
+        params, state, _ = opt.update(loss_grad(params), state, params)
+    np.testing.assert_allclose(np.asarray(params["x"]), [1.0, 2.0], atol=0.05)
+
+
+def test_grad_clipping():
+    opt = AdamW(lr=0.0, clip_norm=1.0)
+    params = {"x": jnp.zeros(3)}
+    state = opt.init(params)
+    g = {"x": jnp.array([100.0, 0.0, 0.0])}
+    _, _, m = opt.update(g, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(100.0)
+
+
+def test_global_norm():
+    assert float(global_norm({"a": jnp.array([3.0]),
+                              "b": jnp.array([4.0])})) == pytest.approx(5.0)
+
+
+def test_schedules():
+    f = cosine_schedule(1.0, 10, 100)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert float(f(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(f(jnp.int32(100))) == pytest.approx(0.1, abs=1e-6)
+    g = linear_warmup(2.0, 4)
+    assert float(g(jnp.int32(2))) == pytest.approx(1.0)
+    assert float(g(jnp.int32(50))) == pytest.approx(2.0)

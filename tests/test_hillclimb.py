@@ -1,0 +1,79 @@
+"""Algorithm 1 (hill climbing) properties, incl. hypothesis invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import (ClusterConditions, PlanningStats,
+                                ResourceDim, paper_cluster)
+from repro.core.hillclimb import brute_force, hill_climb
+
+
+def test_separable_convex_reaches_optimum():
+    cluster = paper_cluster(50, 10)
+    opt = (37, 6)
+    fn = lambda r: (r[0] - opt[0]) ** 2 + 3 * (r[1] - opt[1]) ** 2  # noqa
+    res, cost = hill_climb(fn, cluster)
+    assert res == opt and cost == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(1, 100), b=st.integers(1, 10),
+       wa=st.floats(0.1, 5.0), wb=st.floats(0.1, 5.0))
+def test_hypothesis_convex_equals_brute_force(a, b, wa, wb):
+    """On separable convex costs, the local optimum is global: hill climbing
+    must match brute force exactly while exploring fewer configs."""
+    cluster = paper_cluster(100, 10)
+    fn = lambda r: wa * (r[0] - a) ** 2 + wb * (r[1] - b) ** 2  # noqa
+    s1, s2 = PlanningStats(), PlanningStats()
+    r_hc, c_hc = hill_climb(fn, cluster, stats=s1)
+    r_bf, c_bf = brute_force(fn, cluster, stats=s2)
+    assert c_hc == pytest.approx(c_bf)
+    assert s1.configs_explored < s2.configs_explored
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_hypothesis_local_optimum_invariant(seed):
+    """Whatever the cost surface, Algorithm 1 terminates at a point no
+    single +-1 step can improve (the paper's 'no better neighbors exist')."""
+    rng = np.random.default_rng(seed)
+    grid = rng.random((21, 11))
+    cluster = ClusterConditions(dims=(ResourceDim("a", 0, 20),
+                                      ResourceDim("b", 0, 10)))
+    fn = lambda r: float(grid[r[0], r[1]])  # noqa
+    res, cost = hill_climb(fn, cluster)
+    for d, delta in ((0, 1), (0, -1), (1, 1), (1, -1)):
+        n = list(res)
+        n[d] += delta
+        if 0 <= n[0] <= 20 and 0 <= n[1] <= 10:
+            assert fn(tuple(n)) >= cost
+
+
+def test_paper_4x_reduction_scale():
+    """Fig 13: hill climbing explores ~4x fewer configs than brute force on
+    the paper's 100x10 grid with a 1/nc-shaped cost."""
+    cluster = paper_cluster(100, 10)
+    fn = lambda r: 100.0 / r[0] + 5.0 * r[1] + 50.0 / r[1]  # noqa
+    s1, s2 = PlanningStats(), PlanningStats()
+    hill_climb(fn, cluster, stats=s1)
+    brute_force(fn, cluster, stats=s2)
+    ratio = s2.configs_explored / s1.configs_explored
+    assert ratio > 1.8, f"expected >=~2x fewer configs, got {ratio:.1f}x"
+
+
+def test_infeasible_plateau_returns_start():
+    cluster = paper_cluster(5, 5)
+    res, cost = hill_climb(lambda r: math.inf, cluster)
+    assert math.isinf(cost)
+
+
+def test_explicit_grid_dims():
+    dims = ClusterConditions(dims=(
+        ResourceDim("p2", 1, 16, values=(1, 2, 4, 8, 16)),
+        ResourceDim("lin", 1, 4),
+    ))
+    fn = lambda r: abs(r[0] - 8) + abs(r[1] - 2)  # noqa
+    res, cost = hill_climb(fn, dims)
+    assert res == (8, 2) and cost == 0

@@ -1,0 +1,118 @@
+"""HLO parser: loop-corrected FLOPs and collective bytes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _stats(fn, *args):
+    comp = jax.jit(fn).lower(*args).compile()
+    return H.analyze(comp.as_text())
+
+
+def test_single_matmul_flops():
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    s = _stats(lambda a, b: a @ b, x, w)
+    assert s.dot_flops == pytest.approx(2 * 128 * 256 * 64, rel=0.01)
+
+
+def test_scan_multiplies_flops():
+    """THE critical property: XLA's cost analysis counts while bodies once;
+    our parser must multiply by the trip count."""
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+    s = _stats(scanned, x, ws)
+    one = 2 * 128 * 128 * 128
+    assert s.dot_flops == pytest.approx(10 * one, rel=0.05)
+
+
+def test_nested_scan_multiplies():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 3, 64, 64), jnp.float32)
+
+    def nested(x, ws):
+        def outer(c, wgroup):
+            def inner(cc, w):
+                return cc @ w, None
+            c, _ = jax.lax.scan(inner, c, wgroup)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+    s = _stats(nested, x, ws)
+    one = 2 * 64 * 64 * 64
+    assert s.dot_flops == pytest.approx(12 * one, rel=0.05)
+
+
+def test_dtype_bytes():
+    assert H.shape_bytes("bf16", "2,3") == 12
+    assert H.shape_bytes("f32", "") == 4
+    assert H.shape_bytes("pred", "8") == 8
+
+
+def test_parse_tuple_result_while():
+    txt = """
+HloModule m
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4] get-tuple-element(%p), index=1
+  %big = f32[7,4,4] constant({...})
+  %sl = f32[1,4,4] dynamic-slice(%big, %i), dynamic_slice_sizes={1,4,4}
+  %slr = f32[4,4] reshape(%sl)
+  %y = f32[4,4] dot(%x, %slr), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4,4]) tuple(%ip, %y)
+}
+
+%cond (p2: (s32[], f32[4,4])) -> pred[] {
+  %p2 = (s32[], f32[4,4]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4] parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[4,4]) tuple(%z, %a)
+  %w = (s32[], f32[4,4]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[4,4] get-tuple-element(%w), index=1
+}
+"""
+    s = H.analyze(txt)
+    assert s.dot_flops == pytest.approx(7 * 2 * 4 * 4 * 4, rel=0.01)
+
+
+def test_collective_bytes_and_wire_factor():
+    txt = """
+HloModule m
+
+ENTRY %main (a: bf16[8,128]) -> bf16[8,128] {
+  %a = bf16[8,128] parameter(0)
+  %ar = bf16[8,128] all-reduce(%a), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %cp = bf16[8,128] copy(%ar)
+}
+"""
+    s = H.analyze(txt)
+    b = 8 * 128 * 2
+    assert s.collective_bytes["all-reduce"] == pytest.approx(b)
+    assert s.wire_bytes == pytest.approx(b * 2 * 3 / 4)
+
+
+def test_real_collectives_on_sharded_matmul():
+    import numpy as np
+    if jax.device_count() < 1:
+        pytest.skip("no devices")
+    # single-device: no collectives expected
+    s = _stats(lambda a: a.sum(), jax.ShapeDtypeStruct((64,), jnp.float32))
+    assert s.total_collective_bytes == 0

@@ -1,0 +1,154 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs the pure
+jnp oracles in repro.kernels.ref (interpret=True on CPU; TPU is target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------ flash attention --------------------------- #
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 4, 2, 64),      # GQA 2:1
+    (1, 256, 8, 1, 64),      # MQA
+    (2, 128, 4, 2, 128),     # wider head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(B, S, H, KV, hd, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, S, H, hd), dtype)
+    k = jax.random.normal(k2, (B, S, KV, hd), dtype)
+    v = jax.random.normal(k3, (B, S, KV, hd), dtype)
+    o = ops.flash_attention(q, k, v, block_q=64, block_kv=64)
+    r = ref.attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_window_and_softcap(window):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 128, 2, 64))
+    k = jax.random.normal(k2, (1, 128, 2, 64))
+    v = jax.random.normal(k3, (1, 128, 2, 64))
+    o = ops.flash_attention(q, k, v, window=window, attn_softcap=30.0,
+                            block_q=64, block_kv=64)
+    r = ref.attention_ref(q, k, v, window=window, attn_softcap=30.0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_flash_non_causal():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 128, 2, 64))
+    k = jax.random.normal(k2, (1, 128, 2, 64))
+    v = jax.random.normal(k3, (1, 128, 2, 64))
+    o = ops.flash_attention(q, k, v, causal=False, block_q=64, block_kv=64)
+    r = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_flash_block_shape_invariance():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 256, 2, 64))
+    k = jax.random.normal(k2, (1, 256, 2, 64))
+    v = jax.random.normal(k3, (1, 256, 2, 64))
+    o1 = ops.flash_attention(q, k, v, block_q=64, block_kv=128)
+    o2 = ops.flash_attention(q, k, v, block_q=128, block_kv=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5,
+                               rtol=1e-5)
+
+
+# ------------------------------ mamba scan --------------------------------- #
+
+@pytest.mark.parametrize("B,S,D,N,chunk,bd", [
+    (1, 128, 64, 8, 32, 64),
+    (2, 256, 128, 16, 64, 64),
+    (1, 64, 256, 16, 64, 128),
+])
+def test_selective_scan_matches_ref(B, S, D, N, chunk, bd):
+    ks = jax.random.split(KEY, 5)
+    u = jax.random.normal(ks[0], (B, S, D))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (D, N)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y, h = ops.selective_scan(u, dt, A, Bm, Cm, chunk=chunk, block_d=bd)
+    yr, hr = ref.selective_scan_ref(u, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_selective_scan_chunk_invariance():
+    ks = jax.random.split(KEY, 5)
+    B, S, D, N = 1, 128, 64, 8
+    u = jax.random.normal(ks[0], (B, S, D))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (D, N)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y1, _ = ops.selective_scan(u, dt, A, Bm, Cm, chunk=32, block_d=64)
+    y2, _ = ops.selective_scan(u, dt, A, Bm, Cm, chunk=128, block_d=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+
+
+# ------------------------------ joins -------------------------------------- #
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), r=st.sampled_from([128, 512]),
+       s=st.sampled_from([256, 1024]))
+def test_hypothesis_joins_match_oracle(seed, r, s):
+    """Both TPU join kernels agree with the oracle on random PK joins —
+    including empty-match and all-match regimes."""
+    rng = np.random.default_rng(seed)
+    bkeys = np.sort(rng.choice(5000, size=r, replace=False)).astype(np.int32)
+    bvals = (bkeys * 3 + 7).astype(np.int32)
+    probe = rng.integers(0, 5000, size=s).astype(np.int32)
+    expected = np.asarray(ref.hash_join_ref(jnp.asarray(probe),
+                                            jnp.asarray(bkeys),
+                                            jnp.asarray(bvals)))
+    for fn in (ops.bhj_join, ops.smj_join):
+        got = np.asarray(fn(jnp.asarray(probe), jnp.asarray(bkeys),
+                            jnp.asarray(bvals), block_probe=128,
+                            block_build=128))
+        np.testing.assert_array_equal(got, expected)
+
+
+def test_join_semantics_pk():
+    bkeys = jnp.asarray([2, 5, 9], jnp.int32)
+    bvals = jnp.asarray([20, 50, 90], jnp.int32)
+    probe = jnp.asarray([5, 3, 9, 2, 11, 5, 9, 1], jnp.int32)
+    want = np.array([50, -1, 90, 20, -1, 50, 90, -1])
+    got_b = np.asarray(ops.bhj_join(probe, bkeys, bvals, block_probe=8,
+                                    block_build=1))
+    got_s = np.asarray(ops.smj_join(probe, bkeys, bvals, block_probe=8,
+                                    block_build=1))
+    np.testing.assert_array_equal(got_b, want)
+    np.testing.assert_array_equal(got_s, want)
+
+
+def test_join_multi_tile_build_side():
+    """Build side spanning multiple VMEM tiles (the running-scratch path)."""
+    rng = np.random.default_rng(0)
+    bkeys = np.sort(rng.choice(100_000, size=4096, replace=False)) \
+        .astype(np.int32)
+    bvals = (bkeys + 1).astype(np.int32)
+    probe = rng.integers(0, 100_000, size=2048).astype(np.int32)
+    exp = np.asarray(ref.merge_join_ref(jnp.asarray(probe),
+                                        jnp.asarray(bkeys),
+                                        jnp.asarray(bvals)))
+    got = np.asarray(ops.bhj_join(jnp.asarray(probe), jnp.asarray(bkeys),
+                                  jnp.asarray(bvals), block_probe=512,
+                                  block_build=1024))
+    np.testing.assert_array_equal(got, exp)

@@ -1,0 +1,126 @@
+"""Per-arch smoke tests: reduced same-family configs, one forward/train
+step on CPU, asserting output shapes + no NaNs (full configs are exercised
+only via the dry-run)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, REGISTRY
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.runtime.steps import init_train_state, make_loss_fn, \
+    make_train_step
+
+
+def _batch(cfg, key, B=2, S=32):
+    batch = {"labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.embed_inputs:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        batch["embeddings"] = jax.random.normal(
+            key, (B, S, cfg.media_embed_dim))
+    if cfg.family == "vlm":
+        batch["media"] = jax.random.normal(
+            key, (B, cfg.n_media_tokens, cfg.media_embed_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = REGISTRY[arch].smoke()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    hidden, aux, cache = model.forward(params, batch)
+    assert hidden.shape == (2, 32, cfg.d_model)
+    assert cache is None
+    logits = model.logits(params, hidden)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    loss, metrics = jax.jit(make_loss_fn(model))(params, batch)
+    assert bool(jnp.isfinite(loss))
+    # CE at init should be near ln(V)
+    import math
+    assert abs(float(metrics["ce"]) - math.log(cfg.vocab_size)) < 2.5
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = REGISTRY[arch].smoke()
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    key = jax.random.PRNGKey(1)
+    state = init_train_state(model, opt, key)
+    step = jax.jit(make_train_step(model, opt))
+    state2, metrics = step(state, _batch(cfg, key))
+    assert int(state2.step) == 1
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually changed (note: some leaves legitimately receive zero
+    # first-step grads, e.g. weights behind llama-3.2-vision's zero-init
+    # tanh gates — so assert any-leaf-changed)
+    changed = any(
+        not bool(jnp.allclose(a, b))
+        for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                        jax.tree_util.tree_leaves(state2.params)))
+    assert changed
+
+
+def test_loss_decreases_under_training():
+    cfg = REGISTRY["smollm-360m"].smoke()
+    model = build_model(cfg)
+    opt = AdamW(lr=3e-3)
+    key = jax.random.PRNGKey(2)
+    state = init_train_state(model, opt, key)
+    step = jax.jit(make_train_step(model, opt))
+    batch = _batch(cfg, key, B=4, S=64)     # overfit one batch
+    first = last = None
+    for i in range(20):
+        state, metrics = step(state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < first - 0.5, (first, last)
+
+
+def test_microbatch_grad_accumulation_matches():
+    """plan.microbatch=2 must give (numerically close) identical updates."""
+    import dataclasses
+    cfg = dataclasses.replace(REGISTRY["smollm-360m"].smoke(),
+                              dtype="float32")
+    key = jax.random.PRNGKey(3)
+    from repro.sharding import single_device_plan
+    batch = _batch(cfg, key, B=4, S=32)
+
+    losses = {}
+    for mb in (1, 2):
+        plan = single_device_plan().with_(microbatch=mb)
+        model = build_model(cfg, plan)
+        opt = AdamW(lr=1e-3)
+        state = init_train_state(model, opt, jax.random.PRNGKey(4))
+        step = jax.jit(make_train_step(model, opt))
+        state, m = step(state, batch)
+        losses[mb] = (float(m["loss"]),
+                      jax.tree_util.tree_leaves(state.params)[0])
+    assert losses[1][0] == pytest.approx(losses[2][0], rel=1e-3)
+    assert bool(jnp.allclose(losses[1][1], losses[2][1], atol=1e-4))
+
+
+def test_param_counts_match_published_sizes():
+    expected = {
+        "deepseek-67b": 67.4e9, "falcon-mamba-7b": 7.0e9,
+        "gemma2-9b": 9.2e9, "smollm-360m": 0.36e9,
+        "nemotron-4-15b": 15.6e9, "zamba2-2.7b": 2.45e9,
+        "musicgen-medium": 1.8e9, "qwen3-moe-30b-a3b": 30.5e9,
+        "mixtral-8x7b": 46.7e9, "llama-3.2-vision-11b": 11.5e9,
+    }
+    for arch, n in expected.items():
+        got = REGISTRY[arch].param_count()
+        assert abs(got - n) / n < 0.05, (arch, got, n)
+
+
+def test_moe_active_params():
+    cfg = REGISTRY["qwen3-moe-30b-a3b"]
+    assert cfg.active_param_count() / cfg.param_count() < 0.15
+    assert abs(cfg.active_param_count() - 3.3e9) / 3.3e9 < 0.1

@@ -1,0 +1,83 @@
+"""Resource-plan cache (paper §VI-B3): exact / NN / WA semantics."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import PlanningStats, paper_cluster
+from repro.core.plan_cache import ResourcePlanCache, snap_to_grid
+
+
+def test_exact_mode():
+    c = ResourcePlanCache("exact")
+    c.insert("SMJ", "join", 1.0, (10, 4))
+    assert c.lookup("SMJ", "join", 1.0) == (10, 4)
+    assert c.lookup("SMJ", "join", 1.01) is None
+    assert c.lookup("BHJ", "join", 1.0) is None     # model-id keyed
+
+
+def test_nearest_neighbor_threshold():
+    c = ResourcePlanCache("nearest_neighbor", threshold=0.1)
+    c.insert("SMJ", "join", 1.0, (10, 4))
+    assert c.lookup("SMJ", "join", 1.05) == (10, 4)
+    assert c.lookup("SMJ", "join", 1.2) is None
+    c.insert("SMJ", "join", 1.08, (20, 8))
+    assert c.lookup("SMJ", "join", 1.07) == (20, 8)   # nearest wins
+
+
+def test_weighted_average_snaps_to_grid():
+    cluster = paper_cluster(100, 10)
+    c = ResourcePlanCache("weighted_average", threshold=1.0)
+    c.insert("SMJ", "join", 1.0, (10, 4))
+    c.insert("SMJ", "join", 2.0, (30, 8))
+    got = c.lookup("SMJ", "join", 1.5, cluster)
+    assert got is not None
+    assert 10 <= got[0] <= 30 and 4 <= got[1] <= 8
+
+
+def test_exact_match_preferred_over_interpolation():
+    c = ResourcePlanCache("weighted_average", threshold=5.0)
+    c.insert("SMJ", "join", 1.0, (10, 4))
+    c.insert("SMJ", "join", 1.5, (50, 9))
+    assert c.lookup("SMJ", "join", 1.0) == (10, 4)
+
+
+def test_stats_counting():
+    s = PlanningStats()
+    c = ResourcePlanCache("exact")
+    c.insert("SMJ", "join", 1.0, (1, 1))
+    c.lookup("SMJ", "join", 1.0, stats=s)
+    c.lookup("SMJ", "join", 9.9, stats=s)
+    assert s.cache_hits == 1 and s.cache_misses == 1
+
+
+def test_insert_overwrites_same_key():
+    c = ResourcePlanCache("exact")
+    c.insert("SMJ", "join", 1.0, (1, 1))
+    c.insert("SMJ", "join", 1.0, (2, 2))
+    assert c.lookup("SMJ", "join", 1.0) == (2, 2)
+    assert len(c) == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(keys=st.lists(st.floats(0.1, 100.0), min_size=1, max_size=20,
+                     unique=True),
+       probe=st.floats(0.1, 100.0), thr=st.floats(0.01, 5.0))
+def test_hypothesis_nn_within_threshold(keys, probe, thr):
+    """NN lookups never return an entry farther than the threshold, and
+    always return one when an entry is within it."""
+    c = ResourcePlanCache("nearest_neighbor", threshold=thr)
+    for i, k in enumerate(keys):
+        c.insert("m", "join", k, (i + 1, 1))
+    got = c.lookup("m", "join", probe)
+    dists = [abs(k - probe) for k in keys]
+    if got is not None:
+        i = got[0] - 1
+        assert abs(keys[i] - probe) <= thr + 1e-9
+        assert abs(keys[i] - probe) == pytest.approx(min(dists), abs=1e-9)
+    else:
+        assert min(dists) > thr - 1e-12
+
+
+def test_snap_to_grid():
+    cluster = paper_cluster(100, 10)
+    assert snap_to_grid((150, 12), cluster) == (100, 10)
+    assert snap_to_grid((0, 0), cluster) == (1, 1)

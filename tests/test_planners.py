@@ -1,0 +1,93 @@
+"""Selinger vs exhaustive oracle; FastRandomized validity (hypothesis)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import paper_cluster
+from repro.core.cost_model import simulator_cost_models
+from repro.core.fast_randomized import (ParetoArchive, cost_vec, dominates,
+                                        fast_randomized_plan)
+from repro.core.plans import OperatorCosting, PlanNode
+from repro.core.schema import random_query, random_schema, tpch_schema
+from repro.core.selinger import exhaustive_left_deep, selinger_plan
+
+
+def _costing(**kw):
+    return OperatorCosting(models=simulator_cost_models(),
+                           cluster=paper_cluster(40, 10), **kw)
+
+
+def _tables(plan: PlanNode):
+    return plan.tables
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 500), n=st.integers(2, 5))
+def test_selinger_matches_exhaustive_oracle(seed, n):
+    """System-R DP must equal brute-force enumeration of all left-deep
+    orders under identical (resource-aware) costing."""
+    schema = random_schema(6, seed=seed)
+    q = random_query(schema, n, seed=seed)
+    p1 = selinger_plan(schema, q, _costing())
+    p2 = exhaustive_left_deep(schema, q, _costing())
+    assert (p1 is None) == (p2 is None)
+    if p1 is not None:
+        assert p1.total_cost == pytest.approx(p2.total_cost, rel=1e-9)
+        assert _tables(p1) == frozenset(q)
+
+
+def test_selinger_tpch_all_runs():
+    schema = tpch_schema(100)
+    plan = selinger_plan(schema, list(schema.relations), _costing())
+    assert plan is not None
+    assert len(plan.tables) == 8
+    assert math.isfinite(plan.total_cost)
+    # every join op carries its planned resources
+    def walk(n):
+        if n.is_leaf:
+            return
+        assert n.resources is not None and n.impl in ("SMJ", "BHJ")
+        walk(n.left)
+        walk(n.right)
+    walk(plan)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 200))
+def test_fast_randomized_valid_and_not_worse_than_random(seed):
+    schema = random_schema(8, seed=seed)
+    q = random_query(schema, 5, seed=seed)
+    best, archive = fast_randomized_plan(schema, q, _costing(),
+                                         iterations=10, seed=seed)
+    if best is None:
+        return
+    assert best.tables == frozenset(q)
+    # the archive is mutually non-dominated (a Pareto set)
+    for a in archive.plans:
+        for b in archive.plans:
+            if a is not b:
+                assert not dominates(cost_vec(a), cost_vec(b), 0.0)
+
+
+def test_fast_randomized_near_selinger_on_tpch():
+    schema = tpch_schema(100)
+    q = ("customer", "orders", "lineitem")
+    sel = selinger_plan(schema, q, _costing())
+    best, _ = fast_randomized_plan(schema, q, _costing(), iterations=10,
+                                   population=6, seed=1)
+    # randomized planner on a 2-join query should be within 2x of optimal
+    assert best.total_cost <= 2.0 * sel.total_cost
+
+
+def test_pareto_archive_eps_dominance():
+    a = ParetoArchive(eps=0.1)
+
+    def plan(t, m):
+        return PlanNode(tables=frozenset({"x"}), rows=1, row_bytes=1,
+                        total_cost=t, total_money=m)
+    assert a.offer(plan(10, 10))
+    assert not a.offer(plan(10.5, 10.5))     # within (1+eps) of existing
+    assert a.offer(plan(5, 20))              # new tradeoff
+    assert a.offer(plan(1, 1))               # dominates all
+    assert a.best(0).total_cost == 1

@@ -1,0 +1,74 @@
+"""RAQO facade: the four §IV optimizer modes + planning-overhead claims."""
+import math
+
+import pytest
+
+from repro.core import (RAQO, ResourcePlanCache, TPCH_QUERIES,
+                        simulator_cost_models, tpch_schema)
+from repro.core.cluster import paper_cluster
+
+
+@pytest.fixture(scope="module")
+def raqo():
+    return RAQO(schema=tpch_schema(100), models=simulator_cost_models())
+
+
+def test_joint_mode(raqo):
+    jp = raqo.joint(TPCH_QUERIES["Q3"])
+    assert math.isfinite(jp.exec_time) and jp.money > 0
+    assert jp.stats.configs_explored > 0
+    ops = jp.operator_resources()
+    assert len(ops) == 2                      # two joins in Q3
+    for impl, res, cost in ops:
+        assert impl in ("SMJ", "BHJ") and len(res) == 2
+
+
+def test_plan_for_resources_mode(raqo):
+    """r => p: every operator must use exactly the quota resources."""
+    jp = raqo.plan_for_resources(TPCH_QUERIES["Q3"], (20, 4))
+    for impl, res, cost in jp.operator_resources():
+        assert res == (20, 4)
+
+
+def test_joint_beats_fixed_resources(raqo):
+    """The core paper claim: joint (p, r) is no worse than plan-first."""
+    joint = raqo.joint(TPCH_QUERIES["Q3"])
+    fixed = raqo.plan_for_resources(TPCH_QUERIES["Q3"], (10, 4))
+    assert joint.exec_time <= fixed.exec_time + 1e-9
+
+
+def test_for_budget_mode(raqo):
+    cheap = raqo.for_budget(TPCH_QUERIES["Q12"], budget=0.001)
+    rich = raqo.for_budget(TPCH_QUERIES["Q12"], budget=10.0)
+    assert rich.exec_time <= cheap.exec_time + 1e-9
+
+
+def test_resources_for_plan_mode(raqo):
+    jp = raqo.joint(TPCH_QUERIES["Q12"])
+    res, money = raqo.resources_for_plan(jp.plan, target_time=60.0)
+    assert res is not None and money > 0
+    # tighter SLA cannot be cheaper
+    res2, money2 = raqo.resources_for_plan(jp.plan, target_time=5.0)
+    if res2 is not None:
+        assert money2 >= money - 1e-9
+
+
+def test_hillclimb_vs_brute_overhead():
+    """Fig 13: hill climbing explores several-x fewer configurations."""
+    kw = dict(schema=tpch_schema(100), models=simulator_cost_models())
+    hc = RAQO(resource_planning="hillclimb", **kw).joint(TPCH_QUERIES["Q3"])
+    bf = RAQO(resource_planning="brute", **kw).joint(TPCH_QUERIES["Q3"])
+    assert bf.stats.configs_explored / hc.stats.configs_explored > 2.0
+    assert hc.exec_time == pytest.approx(bf.exec_time, rel=0.05)
+
+
+def test_cache_reduces_exploration():
+    """Fig 14: resource-plan caching cuts configs explored and plan cost is
+    preserved within the interpolation tolerance."""
+    kw = dict(schema=tpch_schema(100), models=simulator_cost_models())
+    plain = RAQO(**kw).joint(TPCH_QUERIES["All"])
+    cached = RAQO(cache=ResourcePlanCache("nearest_neighbor", 0.1),
+                  **kw).joint(TPCH_QUERIES["All"])
+    assert cached.stats.cache_hits > 0
+    assert plain.stats.configs_explored / cached.stats.configs_explored > 2.0
+    assert cached.exec_time <= plain.exec_time * 1.5

@@ -1,0 +1,114 @@
+"""RAQO-for-TPU: joint sharding/resource decisions, feasibility, elastic
+replanning, roofline term structure."""
+import math
+
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.core.plan_cache import ResourcePlanCache
+from repro.core.roofline import (HW, Resources, chip_seconds, decode_terms,
+                                 prefill_terms, terms_for, train_terms)
+from repro.core.sharding_planner import ShardingPlanner, TpuCluster
+
+
+def test_roofline_terms_positive_and_scale():
+    cfg = get_config("deepseek-67b")
+    shape = get_shape("train_4k")
+    t1 = train_terms(cfg, shape, Resources(1, 16, 16, 2))
+    t2 = train_terms(cfg, shape, Resources(2, 16, 16, 2))
+    assert t1.compute_s > 0 and t1.memory_s > 0 and t1.collective_s > 0
+    # doubling chips halves the compute term
+    assert t2.compute_s == pytest.approx(t1.compute_s / 2, rel=1e-6)
+    assert t1.model_flops == pytest.approx(
+        6 * cfg.param_count() * 256 * 4096, rel=0.01)
+
+
+def test_decode_memory_bound_for_big_dense():
+    t = decode_terms(get_config("deepseek-67b"), get_shape("decode_32k"),
+                     Resources(1, 16, 16, 1))
+    assert t.bottleneck == "memory"       # weight+cache streaming dominates
+
+
+def test_moe_flops_use_active_params():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    t = train_terms(cfg, get_shape("train_4k"), Resources(2, 16, 16, 1))
+    dense_equiv = 8 * cfg.param_count() * 256 * 4096
+    assert t.flops_per_chip * 512 < 0.5 * dense_equiv
+
+
+def test_infeasible_single_chip():
+    t = train_terms(get_config("deepseek-67b"), get_shape("train_4k"),
+                    Resources(1, 1, 1, 1))
+    assert not t.feasible
+
+
+def test_joint_feasible_for_all_archs():
+    p = ShardingPlanner()
+    for arch in ("deepseek-67b", "qwen3-moe-30b-a3b", "falcon-mamba-7b",
+                 "gemma2-9b", "zamba2-2.7b"):
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            d = p.joint(get_config(arch), get_shape(shape), arch=arch)
+            assert d.terms.feasible
+            assert d.terms.hbm_per_chip < HW["hbm_bytes"]
+            assert math.isfinite(d.objective_value)
+
+
+def test_ssm_has_no_attention_schedule_choice():
+    p = ShardingPlanner()
+    d = p.joint(get_config("falcon-mamba-7b"), get_shape("train_4k"))
+    assert d.plan_choice.get("schedule", "dense") == "dense"
+
+
+def test_replan_respects_degraded_cluster():
+    p = ShardingPlanner()
+    full = p.joint(get_config("deepseek-67b"), get_shape("train_4k"))
+    degraded = p.replan(get_config("deepseek-67b"), get_shape("train_4k"),
+                        lost_chips=256)
+    assert degraded.resources.chips <= 256
+    assert degraded.terms.feasible
+    # fewer chips cannot be faster
+    assert degraded.terms.step_s >= full.terms.step_s
+
+
+def test_budget_mode_respects_budget():
+    p = ShardingPlanner()
+    d = p.for_budget(get_config("smollm-360m"), get_shape("train_4k"), 64)
+    assert d.resources.chips <= 64
+
+
+def test_budget_infeasible_raises():
+    p = ShardingPlanner()
+    with pytest.raises(RuntimeError):
+        p.for_budget(get_config("deepseek-67b"), get_shape("train_4k"), 8)
+
+
+def test_stale_cache_validated_under_new_cluster():
+    cache = ResourcePlanCache("nearest_neighbor", 50.0)
+    p = ShardingPlanner(cache=cache)
+    p.joint(get_config("deepseek-67b"), get_shape("train_4k"))
+    d = p.replan(get_config("deepseek-67b"), get_shape("train_4k"),
+                 lost_chips=256)
+    assert d.resources.chips <= 256
+
+
+def test_chip_seconds_objective_prefers_fewer_chips():
+    pt = ShardingPlanner(objective="time")
+    pc = ShardingPlanner(objective="chip_seconds")
+    cfg, shape = get_config("smollm-360m"), get_shape("train_4k")
+    dt_ = pt.joint(cfg, shape)
+    dc = pc.joint(cfg, shape)
+    assert dc.resources.chips <= dt_.resources.chips
+    assert chip_seconds(dc.terms, dc.resources) <= \
+        chip_seconds(dt_.terms, dt_.resources) + 1e-9
+
+
+def test_prefill_terms_swa_cheaper_than_full():
+    """mixtral's SWA prefill attention must cost less compute than an
+    equivalent full-attention config."""
+    import dataclasses
+    cfg = get_config("mixtral-8x7b")
+    full = dataclasses.replace(cfg, attention="full")
+    r = Resources(1, 16, 16, 1)
+    t_swa = prefill_terms(cfg, get_shape("prefill_32k"), r)
+    t_full = prefill_terms(full, get_shape("prefill_32k"), r)
+    assert t_swa.compute_s < t_full.compute_s

@@ -1,0 +1,152 @@
+"""End-to-end behaviour tests for the whole system: train/crash/resume,
+multi-device lowering (subprocess), elastic replan, dry-run artifacts."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+ENV = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+
+
+def _run(args, timeout=1200, env=None):
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, timeout=timeout, env=env or ENV,
+                          cwd=ROOT)
+
+
+def test_train_crash_resume_identical(tmp_path):
+    """Training with a mid-run crash + resume must reach the same final
+    loss as an uninterrupted run (deterministic data + checkpointing)."""
+    base = ["-m", "repro.launch.train", "--arch", "smollm-360m", "--smoke",
+            "--steps", "20", "--batch", "2", "--seq", "32",
+            "--ckpt-every", "5", "--log-every", "20"]
+    r1 = _run(base + ["--ckpt-dir", str(tmp_path / "a")])
+    assert r1.returncode == 0, r1.stdout + r1.stderr
+    final_a = [l for l in r1.stdout.splitlines() if "done" in l][-1]
+
+    r2 = _run(base + ["--ckpt-dir", str(tmp_path / "b"), "--fail-at", "12"])
+    assert r2.returncode == 1
+    r3 = _run(base + ["--ckpt-dir", str(tmp_path / "b")])
+    assert r3.returncode == 0, r3.stdout + r3.stderr
+    assert "resumed from step 10" in r3.stdout
+    final_b = [l for l in r3.stdout.splitlines() if "done" in l][-1]
+    assert final_a.split("loss")[-1] == final_b.split("loss")[-1]
+
+
+def test_sigterm_checkpoint_then_exit(tmp_path):
+    import signal
+    import time
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-360m",
+         "--smoke", "--steps", "5000000", "--batch", "2", "--seq", "32",
+         "--ckpt-every", "1000000", "--log-every", "50",
+         "--ckpt-dir", str(tmp_path)],
+        env=ENV, cwd=ROOT, stdout=subprocess.PIPE, text=True)
+    time.sleep(30)                      # let it warm up + take some steps
+    proc.send_signal(signal.SIGTERM)
+    out, _ = proc.communicate(timeout=300)
+    assert proc.returncode == 17, out    # PREEMPT_EXIT
+    assert "preempted" in out
+    # a checkpoint exists
+    assert any(p.name.startswith("step_") for p in tmp_path.iterdir())
+
+
+@pytest.mark.slow
+def test_multi_device_lowering_subprocess():
+    """8 virtual devices, (2,2,2) mesh: train/decode lower+compile for one
+    arch per family."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import REGISTRY
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.specs import (batch_specs, batch_shardings,
+                                decode_input_specs, plan_for,
+                                serve_param_specs, train_state_specs)
+from repro.models.model import build_model
+from repro.optim import AdamW
+from repro.runtime.steps import make_train_step
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+ns = lambda t: jax.tree_util.tree_map(
+    lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P))
+for name in ["smollm-360m", "mixtral-8x7b", "falcon-mamba-7b",
+             "zamba2-2.7b"]:
+    cfg = REGISTRY[name].smoke()
+    for kind in ("train", "decode"):
+        shape = ShapeConfig("t", 64, 8, kind)
+        plan = plan_for(cfg, shape, mesh)
+        model = build_model(cfg, plan)
+        with mesh:
+            if kind == "train":
+                st, ss = train_state_specs(model)
+                fn = make_train_step(model, AdamW(lr=1e-4))
+                jax.jit(fn, in_shardings=(ns(ss),
+                        batch_shardings(cfg, shape, mesh, plan)),
+                        out_shardings=(ns(ss), None)).lower(
+                    st, batch_specs(cfg, shape)).compile()
+            else:
+                pstruct = serve_param_specs(cfg, model)
+                inputs, cache, qpos = decode_input_specs(cfg, shape, model)
+                in_shard = jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, plan.spec(
+                        ("batch", None) if s.ndim == 2
+                        else ("batch", None, None))), inputs)
+                jax.jit(lambda p, c, i, q: model.decode_step(p, c, i, q),
+                        in_shardings=(ns(model.param_specs()),
+                                      ns(model.cache_specs()), in_shard,
+                                      NamedSharding(mesh,
+                                                    plan.spec(("batch",)))),
+                        out_shardings=None).lower(
+                    pstruct, cache, inputs, qpos).compile()
+        print("OK", name, kind)
+print("ALL_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=3000,
+                       env={**os.environ}, cwd=ROOT)
+    assert "ALL_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-4000:]
+
+
+def test_dryrun_artifacts_complete_if_present():
+    """When the full sweep has produced artifacts, every runnable cell must
+    be status=ok and every long_500k full-attention cell skipped."""
+    art = ROOT / "artifacts" / "dryrun"
+    if not art.exists() or len(list(art.glob("*.json"))) < 80:
+        pytest.skip("full dry-run sweep artifacts not present")
+    from repro.configs import all_cells
+    recs = {}
+    for f in art.glob("*.json"):
+        r = json.loads(f.read_text())
+        if r.get("plan_overrides"):
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    for arch, shape, runnable, why in all_cells():
+        for mesh in ("single", "multi"):
+            r = recs.get((arch, shape, mesh))
+            assert r is not None, (arch, shape, mesh)
+            if runnable:
+                assert r["status"] == "ok", (arch, shape, mesh,
+                                             r.get("error", ""))
+                assert r["hlo"]["dot_flops_per_device"] > 0
+            else:
+                assert r["status"] == "skipped"
+
+
+def test_elastic_supervisor_replans(tmp_path):
+    r = _run(["-m", "repro.launch.elastic", "--arch", "smollm-360m",
+              "--smoke", "--steps", "16", "--max-restarts", "2",
+              "--ckpt-dir", str(tmp_path), "--",
+              "--fail-at", "9", "--batch", "2", "--seq", "32",
+              "--ckpt-every", "4", "--log-every", "8"], timeout=2400)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-2000:]
+    assert "new RAQO decision" in r.stdout
+    assert "training completed" in r.stdout
