@@ -15,10 +15,12 @@ from pathlib import Path
 
 def main() -> None:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-    from benchmarks import paper_figs, roofline_table, tpu_planner
+    from benchmarks import (paper_figs, resource_planning_bench,
+                            roofline_table, tpu_planner)
 
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
-    fns = list(paper_figs.ALL) + [roofline_table.run, tpu_planner.run]
+    fns = list(paper_figs.ALL) + [resource_planning_bench.run,
+                                  roofline_table.run, tpu_planner.run]
     all_rows = []
     print("name,us_per_call,derived")
     for fn in fns:

@@ -9,7 +9,9 @@ from repro.core.cost_model import (HiveSimulator, RegressionModel,  # noqa: F401
                                    SimulatorCostModel, monetary_cost,
                                    paper_models, simulator_cost_models,
                                    simulator_models)
-from repro.core.hillclimb import brute_force, hill_climb  # noqa: F401
+from repro.core.hillclimb import (argmin_grid, brute_force,  # noqa: F401
+                                  enumerate_configs, hill_climb,
+                                  hill_climb_multi)
 from repro.core.plan_cache import ResourcePlanCache  # noqa: F401
 from repro.core.plans import IMPLS, OperatorCosting, PlanNode  # noqa: F401
 from repro.core.raqo import RAQO, JointPlan  # noqa: F401

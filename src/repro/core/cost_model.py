@@ -15,6 +15,16 @@ Three layers:
 
 3. ``RegressionModel.fit``: ordinary least squares (numpy lstsq) over the
    same feature vector — the paper's training procedure.
+
+Every model exposes two evaluation paths with bit-identical arithmetic:
+
+* ``cost(ss, cs, nc, ls)``   — one configuration, scalar floats.
+* ``cost_grid(ss, ls, configs)`` — an ``(N, 2)`` array of ``(nc, cs)``
+  configurations evaluated in a single vectorized call.  Both paths share
+  the same elementwise expression (same operation order), so a batched
+  argmin over the grid selects exactly the configuration the scalar loop
+  would — the property the planners rely on when they swap the inner
+  resource-planning loop for an array program.
 """
 from __future__ import annotations
 
@@ -30,6 +40,23 @@ FEATURES = ("ss", "ss2", "cs", "cs2", "nc", "nc2", "cs_nc")
 def feature_vector(ss: float, cs: float, nc: float) -> np.ndarray:
     return np.array([ss, ss * ss, cs, cs * cs, nc, nc * nc, cs * nc],
                     dtype=np.float64)
+
+
+def _split_configs(configs) -> Tuple[np.ndarray, np.ndarray]:
+    """(N, 2) array of (nc, cs) resource configurations -> float columns."""
+    a = np.asarray(configs, dtype=np.float64)
+    if a.ndim != 2 or a.shape[1] != 2:
+        raise ValueError(f"expected (N, 2) (nc, cs) configs, got {a.shape}")
+    return a[:, 0], a[:, 1]
+
+
+def _oom_mask(oom_fn, ss: float, cs: np.ndarray) -> np.ndarray:
+    """Vectorize an (ss, cs) -> bool OOM predicate over a cs column."""
+    try:
+        m = oom_fn(ss, cs)
+        return np.broadcast_to(np.asarray(m, dtype=bool), cs.shape)
+    except (TypeError, ValueError):          # non-numpy-compatible predicate
+        return np.array([bool(oom_fn(ss, float(c))) for c in cs])
 
 
 # --- the paper's published coefficients (§VI-A), verbatim ------------------- #
@@ -54,12 +81,27 @@ class RegressionModel:
     # planners never chase negative-cost corners.
     floor: float = 1e-3
 
+    def _eval(self, ss, cs, nc):
+        # Shared by cost/cost_grid: one fixed elementwise operation order so
+        # scalar and batched evaluation agree bit-for-bit.
+        c = self.coef
+        return (c[0] * ss + c[1] * (ss * ss) + c[2] * cs + c[3] * (cs * cs)
+                + c[4] * nc + c[5] * (nc * nc) + c[6] * (cs * nc))
+
     def cost(self, ss: float, cs: float, nc: float, ls: float = 0.0) -> float:
         # NOTE: the paper's feature vector contains only the *smaller* input
         # size — the large side (ls) is not a feature; accepted and ignored.
         if self.oom_fn is not None and self.oom_fn(ss, cs):
             return math.inf
-        return max(float(self.coef @ feature_vector(ss, cs, nc)), self.floor)
+        return max(float(self._eval(ss, cs, nc)), self.floor)
+
+    def cost_grid(self, ss: float, ls: float, configs) -> np.ndarray:
+        """Vectorized ``cost`` over an (N, 2) array of (nc, cs) configs."""
+        nc, cs = _split_configs(configs)
+        out = np.maximum(self._eval(ss, cs, nc), self.floor)
+        if self.oom_fn is not None:
+            out = np.where(_oom_mask(self.oom_fn, ss, cs), np.inf, out)
+        return out
 
     @classmethod
     def fit(cls, name: str, xs: Sequence[Tuple[float, float, float]],
@@ -125,6 +167,32 @@ class HiveSimulator:
         return self.smj(ss, ls, cs, nc) if impl == "SMJ" else \
             self.bhj(ss, ls, cs, nc)
 
+    # -- vectorized twins: identical expressions over (nc, cs) columns ------ #
+
+    def smj_grid(self, ss: float, ls: float, cs: np.ndarray,
+                 nc: np.ndarray) -> np.ndarray:
+        total = ss + ls
+        shuffle = total / (self.net_gbps * nc)
+        per_c = total / nc
+        spill = np.maximum(1.0, per_c / np.maximum(cs * 0.5, 1e-3))
+        sort = self.sort_const * total * math.log2(max(total * 8, 2)) \
+            * spill / (self.disk_gbps * 80 * nc)
+        merge = total / (self.probe_gbps * nc)
+        return self.container_startup_s + shuffle + sort + merge
+
+    def bhj_grid(self, ss: float, ls: float, cs: np.ndarray,
+                 nc: np.ndarray) -> np.ndarray:
+        broadcast = ss * nc / (self.net_gbps * nc) + ss / self.net_gbps * 0.1
+        build = ss / self.build_gbps
+        probe = ls / (self.probe_gbps * nc)
+        out = self.container_startup_s + broadcast + build + probe
+        return np.where(ss > self.bhj_mem_frac * cs, np.inf, out)
+
+    def cost_grid(self, impl: str, ss: float, ls: float, cs: np.ndarray,
+                  nc: np.ndarray) -> np.ndarray:
+        return self.smj_grid(ss, ls, cs, nc) if impl == "SMJ" else \
+            self.bhj_grid(ss, ls, cs, nc)
+
     # "profile runs" -> training data for regression / decision trees
     def profile(self, ss_grid, cs_grid, nc_grid, ls: float = 74.0):
         xs, y_smj, y_bhj = [], [], []
@@ -171,6 +239,10 @@ class SimulatorCostModel:
 
     def cost(self, ss: float, cs: float, nc: float, ls: float = 74.0) -> float:
         return self.sim.cost(self.name, ss, max(ls, ss), cs, nc)
+
+    def cost_grid(self, ss: float, ls: float, configs) -> np.ndarray:
+        nc, cs = _split_configs(configs)
+        return self.sim.cost_grid(self.name, ss, max(ls, ss), cs, nc)
 
 
 def simulator_cost_models(sim: HiveSimulator | None = None

@@ -139,6 +139,7 @@ def fast_randomized_plan(schema: Schema, tables: Sequence[str],
                          impls: Sequence[str] = IMPLS
                          ) -> Tuple[Optional[PlanNode], ParetoArchive]:
     """Returns (best-time plan, Pareto archive over (time, money))."""
+    costing.begin_query()        # fresh per-query resource-plan memo
     rng = random.Random(seed)
     archive = ParetoArchive(eps=eps)
     pop: List[PlanNode] = []

@@ -103,5 +103,9 @@ def snap_to_grid(cfg: Sequence[int], cluster: ClusterConditions
         else:
             v = max(d.lo, min(d.hi, v))
             v = d.lo + round((v - d.lo) / d.step) * d.step
-            out.append(int(v))
+            # rounding can overshoot hi when (hi - lo) is not a multiple of
+            # step; clamp back onto the last reachable grid point
+            if v > d.hi:
+                v -= d.step
+            out.append(int(max(d.lo, v)))
     return tuple(out)

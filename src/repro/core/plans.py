@@ -6,6 +6,15 @@ force, Algorithm-1 hill climbing, or a fixed configuration), optionally
 backed by the resource-plan cache.  Each join operator plans its resources
 independently (paper §VI-B assumption: operators sit at shuffle
 boundaries).
+
+Batched costing: when the cost model exposes ``cost_grid`` (all the models
+in cost_model.py do), resource planning runs as an array program — brute
+force evaluates the whole grid in chunked vectorized calls, and
+``hillclimb_batched`` costs all ±1 neighbors of all starts per iteration
+as one batch.  Results of full-grid planning are memoized per
+(impl, ss, ls, objective) across the operators of one query
+(``begin_query`` resets the memo), independently of the cross-query
+resource-plan cache.
 """
 from __future__ import annotations
 
@@ -13,10 +22,12 @@ import dataclasses
 import math
 from typing import Dict, FrozenSet, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.cost_model import (HiveSimulator, RegressionModel,
                                    monetary_cost)
-from repro.core.hillclimb import brute_force, hill_climb
+from repro.core.hillclimb import brute_force, hill_climb, hill_climb_multi
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.schema import Schema
 
@@ -94,12 +105,21 @@ class OperatorCosting:
     """Joint query+resource costing of a single join operator."""
     models: Dict[str, RegressionModel]
     cluster: ClusterConditions
-    resource_planning: str = "hillclimb"     # hillclimb | brute | fixed
+    # hillclimb | hillclimb_batched | brute | batched | fixed
+    resource_planning: str = "hillclimb"
     fixed_resources: Tuple[int, ...] = (10, 4)
     cache: Optional[ResourcePlanCache] = None
     cache_key_round: float = 0.01            # GB rounding of data-char key
     objective: str = "time"                  # time | money
     stats: PlanningStats = dataclasses.field(default_factory=PlanningStats)
+    # per-query memo of planned resources, keyed (impl, ss, ls, objective)
+    _plan_memo: Dict[Tuple, Tuple[Tuple[int, ...], float]] = \
+        dataclasses.field(default_factory=dict, repr=False)
+
+    def begin_query(self) -> None:
+        """Reset the per-query resource-plan memo (planners call this once
+        per optimized query; the cross-query cache survives)."""
+        self._plan_memo.clear()
 
     def _op_cost_at(self, impl: str, ss: float, ls: float,
                     res: Tuple[int, ...]) -> float:
@@ -112,25 +132,72 @@ class OperatorCosting:
             return monetary_cost(t, cs, nc)
         return t
 
+    def _op_cost_grid(self, impl: str, ss: float, ls: float,
+                      configs) -> np.ndarray:
+        """Vectorized `_op_cost_at` over an (N, 2) array of (nc, cs)."""
+        configs = np.asarray(configs)
+        t = self.models[impl].cost_grid(ss, ls, configs)
+        self.stats.cost_calls += len(configs)
+        if self.objective == "money":
+            nc = configs[:, 0].astype(np.float64)
+            cs = configs[:, 1].astype(np.float64)
+            return np.where(np.isfinite(t), monetary_cost(t, cs, nc),
+                            np.inf)
+        return t
+
+    def _batch_fn(self, impl: str, ss: float, ls: float):
+        if hasattr(self.models[impl], "cost_grid"):
+            return lambda cfgs: self._op_cost_grid(impl, ss, ls, cfgs)
+        return None
+
+    def _cache_kind(self, ls: float) -> str:
+        """Sub-plan kind for the resource-plan cache.  Includes the
+        objective (a time-optimal config is not a money-optimal one) and a
+        coarse log2 bucket of the large-side size, so nearest-neighbor
+        interpolation only happens between operators with comparable
+        probe-side data."""
+        bucket = int(round(math.log2(max(ls, 1e-3))))
+        return f"join:{self.objective}:ls{bucket}"
+
     def plan_resources(self, impl: str, ss: float, ls: float
                        ) -> Tuple[Tuple[int, ...], float]:
-        """Resource planning for one operator (cache -> hill climb)."""
+        """Resource planning for one operator (memo -> cache -> search)."""
+        # exact floats on purpose: the memo must be behavior-preserving
+        # (same (ss, ls) -> same plan and cost); approximate reuse is the
+        # cross-query cache's job, not the memo's
+        mkey = (impl, ss, ls, self.objective)
+        memo = self._plan_memo.get(mkey)
+        if memo is not None:
+            return memo
         key = round(ss, 6)
+        kind = self._cache_kind(ls)
         if self.cache is not None:
-            hit = self.cache.lookup(impl, "join", key, self.cluster,
+            hit = self.cache.lookup(impl, kind, key, self.cluster,
                                     self.stats)
             if hit is not None:
-                return hit, self._op_cost_at(impl, ss, ls, hit)
+                out = hit, self._op_cost_at(impl, ss, ls, hit)
+                self._plan_memo[mkey] = out
+                return out
         fn = lambda res: self._op_cost_at(impl, ss, ls, res)   # noqa: E731
-        if self.resource_planning == "fixed":
+        batch_fn = self._batch_fn(impl, ss, ls)
+        mode = self.resource_planning
+        if mode == "fixed":
             res, cost = self.fixed_resources, fn(self.fixed_resources)
             self.stats.configs_explored += 1
-        elif self.resource_planning == "brute":
-            res, cost = brute_force(fn, self.cluster, self.stats)
+        elif mode in ("brute", "batched"):
+            # the batched backend scans the same grid with identical
+            # arithmetic and tie-breaking; scalar loop is the fallback for
+            # models without cost_grid
+            res, cost = brute_force(fn, self.cluster, self.stats,
+                                    batch_cost_fn=batch_fn)
+        elif mode == "hillclimb_batched":
+            res, cost = hill_climb_multi(fn, self.cluster, stats=self.stats,
+                                         batch_cost_fn=batch_fn)
         else:
             res, cost = hill_climb(fn, self.cluster, stats=self.stats)
         if self.cache is not None and math.isfinite(cost):
-            self.cache.insert(impl, "join", key, res)
+            self.cache.insert(impl, kind, key, res)
+        self._plan_memo[mkey] = (res, cost)
         return res, cost
 
     def best_join(self, schema: Schema, l: PlanNode, r: PlanNode,

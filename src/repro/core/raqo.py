@@ -8,12 +8,16 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.cluster import ClusterConditions, PlanningStats, paper_cluster
 from repro.core.cost_model import RegressionModel, monetary_cost, paper_models
 from repro.core.fast_randomized import fast_randomized_plan
+from repro.core.hillclimb import argmin_grid
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.plans import IMPLS, OperatorCosting, PlanNode
 from repro.core.schema import Schema
@@ -49,7 +53,8 @@ class RAQO:
     cluster: ClusterConditions = dataclasses.field(
         default_factory=paper_cluster)
     planner: str = "selinger"                 # selinger | fastrandomized
-    resource_planning: str = "hillclimb"      # hillclimb | brute | fixed
+    # hillclimb | hillclimb_batched | brute | batched | fixed
+    resource_planning: str = "hillclimb"
     cache: Optional[ResourcePlanCache] = None
     seed: int = 0
 
@@ -69,9 +74,31 @@ class RAQO:
                                        seed=self.seed)
         return best
 
+    def predicted_exec_seconds(self, plan: PlanNode) -> float:
+        """Predicted wall-clock of a plan under the cost models, whatever
+        objective it was optimized for (a money-costed PlanNode accumulates
+        dollars in total_cost, not seconds)."""
+        total = 0.0
+
+        def walk(n: PlanNode):
+            nonlocal total
+            if n.is_leaf:
+                return
+            walk(n.left)
+            walk(n.right)
+            ss = min(n.left.size_gb, n.right.size_gb)
+            ls = max(n.left.size_gb, n.right.size_gb)
+            nc, cs = n.resources
+            t = self.models[n.impl].cost(ss, cs, nc, ls=ls)
+            total += t if math.isfinite(t) else math.inf
+        walk(plan)
+        return total
+
     def _wrap(self, plan: PlanNode, t0: float,
               costing: OperatorCosting) -> JointPlan:
-        return JointPlan(plan=plan, exec_time=plan.total_cost,
+        exec_time = plan.total_cost if costing.objective == "time" \
+            else self.predicted_exec_seconds(plan)
+        return JointPlan(plan=plan, exec_time=exec_time,
                          money=plan.total_money,
                          planner_seconds=time.perf_counter() - t0,
                          stats=costing.stats)
@@ -97,10 +124,34 @@ class RAQO:
                            ) -> Tuple[Optional[Tuple[int, ...]], float]:
         """p => (r, c) : cheapest money whose predicted time <= target.
         Resources are re-planned per operator minimizing $ subject to the
-        SLA; returns (per-op resources of the root op, total money)."""
-        costing = self._costing("money")
+        SLA; returns (per-op resources of the root op, total money).
+
+        Uses the batched costing backend (one vectorized scan of the grid
+        per operator, SLA constraint folded into the cost surface as inf)
+        when the model exposes ``cost_grid``; scalar loop otherwise."""
         total_money = 0.0
         root_res = None
+
+        def cheapest_under_sla(impl: str, ss: float, ls: float):
+            model = self.models[impl]
+            if hasattr(model, "cost_grid"):
+                def batch(cfgs):
+                    t = model.cost_grid(ss, ls, cfgs)
+                    nc = cfgs[:, 0].astype(np.float64)
+                    cs = cfgs[:, 1].astype(np.float64)
+                    money = monetary_cost(t, cs, nc)
+                    return np.where(t <= target_time, money, np.inf)
+                res, m = argmin_grid(batch, self.cluster)
+                return None if res is None else (res, m)
+            best = None
+            for res in self.cluster.all_configs():
+                nc, cs = res
+                t = model.cost(ss, cs, nc, ls=ls)
+                if t <= target_time:
+                    m = monetary_cost(t, cs, nc)
+                    if best is None or m < best[1]:
+                        best = (res, m)
+            return best
 
         def walk(n: PlanNode):
             nonlocal total_money, root_res
@@ -110,14 +161,7 @@ class RAQO:
             walk(n.right)
             ss = min(n.left.size_gb, n.right.size_gb)
             ls = max(n.left.size_gb, n.right.size_gb)
-            best = None
-            for res in self.cluster.all_configs():
-                nc, cs = res
-                t = self.models[n.impl].cost(ss, cs, nc)
-                if t <= target_time:
-                    m = monetary_cost(t, cs, nc)
-                    if best is None or m < best[1]:
-                        best = (res, m)
+            best = cheapest_under_sla(n.impl, ss, ls)
             if best is not None:
                 total_money += best[1]
                 root_res = best[0]
@@ -133,10 +177,18 @@ class RAQO:
         plan_m = self._plan(tables, costing_m)
         costing_t = self._costing("time")
         plan_t = self._plan(tables, costing_t)
-        pick = None
-        for p in (plan_t, plan_m):
+        pick, pick_costing, pick_secs = None, None, math.inf
+        for p, c in ((plan_t, costing_t), (plan_m, costing_m)):
             if p is not None and p.total_money <= budget:
-                if pick is None or p.total_cost < pick.total_cost:
-                    pick = p
-        pick = pick or plan_m                # over budget: cheapest available
-        return self._wrap(pick, t0, costing_m)
+                # compare predicted *seconds* for both candidates — a
+                # money-costed plan's total_cost is dollars, numerically
+                # incomparable with the time plan's seconds
+                secs = self.predicted_exec_seconds(p)
+                if pick is None or secs < pick_secs:
+                    pick, pick_costing, pick_secs = p, c, secs
+        if pick is None:                     # over budget: cheapest available
+            pick, pick_costing = plan_m, costing_m
+        # attribute stats to the costing that actually produced the picked
+        # plan (previously money-costing stats were reported even when the
+        # time-optimized plan won)
+        return self._wrap(pick, t0, pick_costing)

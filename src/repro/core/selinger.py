@@ -17,6 +17,7 @@ def selinger_plan(schema: Schema, tables: Sequence[str],
                   costing: OperatorCosting,
                   impls: Sequence[str] = IMPLS) -> Optional[PlanNode]:
     """Optimal left-deep plan under the (resource-aware) cost model."""
+    costing.begin_query()        # fresh per-query resource-plan memo
     tables = tuple(tables)
     n = len(tables)
     best: Dict[FrozenSet[str], PlanNode] = {}
@@ -59,6 +60,7 @@ def exhaustive_left_deep(schema: Schema, tables: Sequence[str],
                          costing: OperatorCosting,
                          impls: Sequence[str] = IMPLS) -> Optional[PlanNode]:
     """All n! left-deep orders — oracle used by tests to validate Selinger."""
+    costing.begin_query()
     best = None
     for perm in itertools.permutations(tables):
         plan = leaf(schema, perm[0])

@@ -25,7 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.cluster import ClusterConditions, PlanningStats, ResourceDim
-from repro.core.hillclimb import brute_force, hill_climb
+from repro.core.hillclimb import brute_force, hill_climb_multi
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.roofline import (HW, Resources, RooflineTerms, chip_seconds,
                                  terms_for)
@@ -172,14 +172,9 @@ class ShardingPlanner:
                 if self.resource_planning == "brute":
                     res, cost = brute_force(fn, dims, stats)
                 else:
-                    res, cost = hill_climb(fn, dims, stats=stats)
-                    # multi-start: also climb from the max config (decode
-                    # workloads are often best at large tp)
-                    res2, cost2 = hill_climb(fn, dims,
-                                             start=dims.max_config(),
-                                             stats=stats)
-                    if cost2 < cost:
-                        res, cost = res2, cost2
+                    # multi-start (min + max corners): decode workloads are
+                    # often best at large tp, training at small
+                    res, cost = hill_climb_multi(fn, dims, stats=stats)
                     if not math.isfinite(cost):
                         # both starts stranded on an infeasible plateau
                         # (OOM below / budget above).  The TPU resource grid

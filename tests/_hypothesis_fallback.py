@@ -1,0 +1,176 @@
+"""Minimal in-repo fallback for ``hypothesis`` when it is not installed.
+
+The test environment for this repo cannot always install third-party
+packages, but six test modules use property-based tests.  When the real
+``hypothesis`` is importable we never touch anything (conftest checks
+first); otherwise this module is registered in ``sys.modules`` under the
+names ``hypothesis`` / ``hypothesis.strategies`` and provides the small
+API surface the test-suite uses:
+
+    @settings(max_examples=N, deadline=None)
+    @given(x=st.integers(...), y=st.floats(...), ...)
+
+    st.integers / st.floats / st.booleans / st.sampled_from / st.lists /
+    st.tuples / st.just
+
+Draws are pseudo-random but **deterministic per test** (the RNG is seeded
+from the test's qualified name), so failures reproduce across runs.  This
+is a shrinking-free, database-free subset — enough to exercise the stated
+invariants, not a replacement for real hypothesis in CI images that have
+it installed (declared in pyproject's ``[test]`` extra).
+"""
+from __future__ import annotations
+
+import math
+import random
+import sys
+import types
+from typing import Any, Callable, List, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    """A draw function wrapper; composes like the real strategies do."""
+
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 label: str = "strategy"):
+        self._draw = draw
+        self._label = label
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<fallback {self._label}>"
+
+
+def integers(min_value: int = -(2 ** 31), max_value: int = 2 ** 31
+             ) -> _Strategy:
+    lo, hi = int(min_value), int(max_value)
+
+    def draw(rng: random.Random) -> int:
+        # bias towards the boundaries occasionally, like hypothesis does
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return rng.randint(lo, hi)
+    return _Strategy(draw, f"integers({lo}, {hi})")
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           allow_nan: bool = False, allow_infinity: bool = False
+           ) -> _Strategy:
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng: random.Random) -> float:
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return rng.uniform(lo, hi)
+    return _Strategy(draw, f"floats({lo}, {hi})")
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def just(value: Any) -> _Strategy:
+    return _Strategy(lambda rng: value, f"just({value!r})")
+
+
+def sampled_from(seq: Sequence[Any]) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: rng.choice(items),
+                     f"sampled_from(<{len(items)} items>)")
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies),
+                     "tuples(...)")
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          unique: bool = False) -> _Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        out: List[Any] = []
+        attempts = 0
+        while len(out) < n and attempts < 100 * max(n, 1):
+            attempts += 1
+            v = elements.draw(rng)
+            if unique and any(v == u or (
+                    isinstance(v, float) and isinstance(u, float)
+                    and math.isclose(v, u, rel_tol=0, abs_tol=0))
+                    for u in out):
+                continue
+            out.append(v)
+        return out
+    return _Strategy(draw, "lists(...)")
+
+
+class settings:
+    """Decorator recording max_examples; deadline/others are ignored."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline: Any = None, **_ignored: Any):
+        self.max_examples = int(max_examples)
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._fallback_max_examples = self.max_examples  # type: ignore
+        return fn
+
+
+def given(*args: _Strategy, **kwargs: _Strategy) -> Callable:
+    if args:
+        raise TypeError(
+            "fallback @given supports keyword strategies only "
+            "(the repo's tests all use keyword form)")
+
+    def decorate(fn: Callable) -> Callable:
+        inner_max = getattr(fn, "_fallback_max_examples", None)
+
+        # NOTE: zero-arg wrapper on purpose (no functools.wraps): pytest
+        # must not see the strategy parameters as fixture requests.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples",
+                        inner_max or _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in kwargs.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (fallback hypothesis, "
+                        f"example {i + 1}/{n}): {drawn!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_fallback = True  # type: ignore
+        return wrapper
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:          # real one (or us) already there
+        return
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "sampled_from",
+                 "tuples", "lists"):
+        setattr(st, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    hyp.__fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,7 +1,17 @@
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property-based tests use hypothesis (declared in pyproject's [test]
+# extra).  Hermetic environments without it fall back to the in-repo
+# deterministic subset so the six property-test modules still collect
+# and run.
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_fallback import install as _install_hypothesis_fallback
+    _install_hypothesis_fallback()
 
 # NOTE: do NOT set XLA_FLAGS / device counts here — smoke tests and benches
 # must see the real single CPU device.  Multi-device tests spawn

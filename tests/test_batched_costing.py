@@ -1,0 +1,259 @@
+"""Batched costing backend: scalar/vectorized parity, memoization, and the
+regression tests for the planner bugs fixed alongside it."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import (ClusterConditions, PlanningStats,
+                                ResourceDim, paper_cluster, scaled_cluster)
+from repro.core.cost_model import (paper_models, simulator_cost_models,
+                                   simulator_models)
+from repro.core.hillclimb import (argmin_grid, brute_force, enumerate_configs,
+                                  hill_climb, hill_climb_multi)
+from repro.core.plan_cache import ResourcePlanCache
+from repro.core.plans import OperatorCosting
+from repro.core.schema import TPCH_QUERIES, tpch_schema
+from repro.core.raqo import RAQO
+
+
+# --------------------- batched brute force == scalar ----------------------- #
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), na=st.integers(1, 23),
+       nb=st.integers(1, 17))
+def test_hypothesis_batched_bruteforce_bit_identical(seed, na, nb):
+    """Batched brute_force returns the bit-identical argmin (config AND
+    cost) of the scalar loop on random cost grids, including ties and
+    infeasible (inf) entries."""
+    rng = np.random.default_rng(seed)
+    grid = rng.integers(0, 50, size=(na, nb)).astype(np.float64)
+    grid[rng.random((na, nb)) < 0.1] = np.inf         # infeasible patches
+    cluster = ClusterConditions(dims=(ResourceDim("a", 0, na - 1),
+                                      ResourceDim("b", 0, nb - 1)))
+    fn = lambda r: float(grid[r[0], r[1]])            # noqa: E731
+    batch = lambda cfgs: grid[cfgs[:, 0], cfgs[:, 1]]  # noqa: E731
+    s1, s2 = PlanningStats(), PlanningStats()
+    r_s, c_s = brute_force(fn, cluster, s1)
+    r_b, c_b = brute_force(fn, cluster, s2, batch_cost_fn=batch)
+    assert r_b == r_s
+    assert (c_b == c_s) or (math.isinf(c_b) and math.isinf(c_s))
+    assert s1.configs_explored == s2.configs_explored == na * nb
+
+
+def test_batched_bruteforce_chunked_matches_unchunked():
+    cluster = paper_cluster(100, 10)
+    cfgs = enumerate_configs(cluster)
+    costs = np.abs(cfgs[:, 0] - 63.0) + 7.0 * np.abs(cfgs[:, 1] - 4.0)
+    lookup = {tuple(c): v for c, v in zip(cfgs.tolist(), costs)}
+    batch = lambda a: np.array([lookup[tuple(r)] for r in a.tolist()])  # noqa
+    for chunk in (7, 100, 1 << 20):
+        res, cost = argmin_grid(batch, cluster, chunk_size=chunk)
+        assert res == (63, 4) and cost == 0.0
+
+
+def test_enumerate_configs_matches_all_configs_order():
+    cluster = ClusterConditions(dims=(
+        ResourceDim("a", 1, 7, step=2),
+        ResourceDim("b", 1, 16, values=(1, 2, 4, 8, 16)),
+    ))
+    assert [tuple(r) for r in enumerate_configs(cluster)] == \
+        list(cluster.all_configs())
+
+
+# ------------------------ cost_grid == scalar cost ------------------------- #
+
+@pytest.mark.parametrize("models", [simulator_cost_models(),
+                                    simulator_models(), paper_models()])
+@pytest.mark.parametrize("impl", ["SMJ", "BHJ"])
+def test_cost_grid_bit_identical_to_scalar(models, impl):
+    """Every model layer's cost_grid agrees bit-for-bit with its scalar
+    cost over the whole paper grid (inf for OOM included)."""
+    cluster = paper_cluster(100, 10)
+    cfgs = enumerate_configs(cluster)
+    ss, ls = 2.0, 74.0
+    grid = models[impl].cost_grid(ss, ls, cfgs)
+    for (nc, cs), g in zip(cfgs.tolist(), grid):
+        s = models[impl].cost(ss, cs, nc, ls=ls)
+        assert (g == s) or (math.isinf(g) and math.isinf(s)), \
+            f"{impl} mismatch at nc={nc} cs={cs}: grid={g} scalar={s}"
+
+
+@pytest.mark.parametrize("objective", ["time", "money"])
+@pytest.mark.parametrize("impl", ["SMJ", "BHJ"])
+def test_operator_costing_batched_equals_scalar(objective, impl):
+    """plan_resources through the batched path returns the identical
+    config and cost as the scalar brute-force loop, per impl/objective."""
+    cluster = paper_cluster(100, 10)
+    kw = dict(models=simulator_cost_models(), cluster=cluster,
+              objective=objective)
+    for ss, ls in ((0.5, 74.0), (2.0, 10.0), (6.0, 200.0)):
+        scalar = OperatorCosting(resource_planning="brute", **kw)
+        # disable the vectorized backend to force the per-config loop
+        scalar._batch_fn = lambda *a: None
+        batched = OperatorCosting(resource_planning="batched", **kw)
+        r_s, c_s = scalar.plan_resources(impl, ss, ls)
+        r_b, c_b = batched.plan_resources(impl, ss, ls)
+        assert r_b == r_s and c_b == c_s
+
+
+def test_scaled_cluster_batched_plan_smoke():
+    """A 20K-point scaled grid plans in one batched call and picks a
+    feasible config (full 10M-point run lives in the benchmark)."""
+    costing = OperatorCosting(models=simulator_cost_models(),
+                              cluster=scaled_cluster(1000, 20),
+                              resource_planning="batched")
+    res, cost = costing.plan_resources("SMJ", 2.0, 74.0)
+    assert math.isfinite(cost) and 1 <= res[0] <= 1000 and 1 <= res[1] <= 20
+    assert costing.stats.configs_explored == 20_000
+
+
+# ------------------------- multi-start hill climb -------------------------- #
+
+def test_hill_climb_multi_batched_matches_scalar_on_convex():
+    cluster = paper_cluster(100, 10)
+    opt = (63, 4)
+    fn = lambda r: (r[0] - opt[0]) ** 2 + 3 * (r[1] - opt[1]) ** 2  # noqa
+    batch = lambda a: ((a[:, 0] - opt[0]) ** 2.0                    # noqa
+                       + 3 * (a[:, 1] - opt[1]) ** 2.0)
+    r1, c1 = hill_climb_multi(fn, cluster)
+    r2, c2 = hill_climb_multi(fn, cluster, batch_cost_fn=batch)
+    assert r1 == r2 == opt and c1 == c2 == 0
+
+
+def test_hill_climb_multi_batched_local_optimum_invariant():
+    rng = np.random.default_rng(7)
+    grid = rng.random((21, 11))
+    cluster = ClusterConditions(dims=(ResourceDim("a", 0, 20),
+                                      ResourceDim("b", 0, 10)))
+    batch = lambda a: grid[a[:, 0], a[:, 1]]          # noqa: E731
+    res, cost = hill_climb_multi(lambda r: float(grid[r]), cluster,
+                                 batch_cost_fn=batch)
+    assert cost == grid[res]
+    for d, delta in ((0, 1), (0, -1), (1, 1), (1, -1)):
+        n = list(res)
+        n[d] += delta
+        if 0 <= n[0] <= 20 and 0 <= n[1] <= 10:
+            assert grid[tuple(n)] >= cost
+
+
+def test_hill_climb_multi_explicit_starts():
+    cluster = paper_cluster(20, 8)
+    # two basins: global optimum near the max corner
+    fn = lambda r: min((r[0] - 3) ** 2 + (r[1] - 2) ** 2 + 5,   # noqa
+                       (r[0] - 19) ** 2 + (r[1] - 7) ** 2)
+    res, cost = hill_climb_multi(fn, cluster)       # min+max default starts
+    assert res == (19, 7) and cost == 0
+
+
+# ------------------------- per-query memoization --------------------------- #
+
+def test_plan_memo_dedupes_within_query_and_resets():
+    costing = OperatorCosting(models=simulator_cost_models(),
+                              cluster=paper_cluster(50, 10),
+                              resource_planning="batched")
+    r1, c1 = costing.plan_resources("SMJ", 2.0, 74.0)
+    explored = costing.stats.configs_explored
+    r2, c2 = costing.plan_resources("SMJ", 2.0, 74.0)     # memo hit
+    assert (r2, c2) == (r1, c1)
+    assert costing.stats.configs_explored == explored
+    costing.begin_query()
+    costing.plan_resources("SMJ", 2.0, 74.0)              # searches again
+    assert costing.stats.configs_explored == 2 * explored
+
+
+def test_plan_memo_keys_on_objective_and_ls():
+    costing_t = OperatorCosting(models=simulator_cost_models(),
+                                cluster=paper_cluster(50, 10),
+                                objective="time")
+    r_time, _ = costing_t.plan_resources("SMJ", 2.0, 74.0)
+    r_ls, _ = costing_t.plan_resources("SMJ", 2.0, 300.0)
+    costing_m = OperatorCosting(models=simulator_cost_models(),
+                                cluster=paper_cluster(50, 10),
+                                objective="money")
+    r_money, _ = costing_m.plan_resources("SMJ", 2.0, 74.0)
+    # distinct (ls / objective) -> independently planned configs
+    assert r_money != r_time or r_ls != r_time
+
+
+# --------------------- regression: cache pollution ------------------------- #
+
+def test_shared_cache_keeps_objectives_apart():
+    """One ResourcePlanCache shared between a money costing and a time
+    costing (exactly what RAQO.for_budget does) must not serve
+    time-optimal configs to money-objective lookups."""
+    cluster = paper_cluster(100, 10)
+    cache = ResourcePlanCache("nearest_neighbor", threshold=0.5)
+    kw = dict(models=simulator_cost_models(), cluster=cluster, cache=cache)
+    ss, ls = 2.0, 74.0
+
+    t = OperatorCosting(objective="time", **kw)
+    r_time, _ = t.plan_resources("SMJ", ss, ls)
+
+    m = OperatorCosting(objective="money", **kw)
+    r_money, _ = m.plan_resources("SMJ", ss, ls)
+
+    fresh = OperatorCosting(objective="money", models=kw["models"],
+                            cluster=cluster)
+    r_fresh, _ = fresh.plan_resources("SMJ", ss, ls)
+    assert r_money == r_fresh, \
+        "money lookup was served the time-objective cached config"
+    assert m.stats.cache_hits == 0
+
+
+def test_shared_cache_keeps_ls_buckets_apart():
+    """A cached config for a tiny probe side must not be served for an
+    operator probing 100x more data (pre-fix: key was ss only)."""
+    cluster = paper_cluster(100, 10)
+    cache = ResourcePlanCache("nearest_neighbor", threshold=0.5)
+    c = OperatorCosting(models=simulator_cost_models(), cluster=cluster,
+                        cache=cache)
+    c.plan_resources("SMJ", 2.0, 4.0)
+    c.begin_query()
+    r_big, _ = c.plan_resources("SMJ", 2.0, 400.0)
+    fresh = OperatorCosting(models=simulator_cost_models(), cluster=cluster)
+    r_fresh, _ = fresh.plan_resources("SMJ", 2.0, 400.0)
+    assert r_big == r_fresh
+
+
+# --------------- regression: for_budget stats attribution ------------------ #
+
+def test_for_budget_attributes_stats_to_picked_plan():
+    """With a generous budget for_budget picks the time-optimized plan, so
+    the reported stats must be the time costing's, not the money one's."""
+    kw = dict(schema=tpch_schema(100), models=simulator_cost_models())
+    raqo = RAQO(**kw)
+    rich = raqo.for_budget(TPCH_QUERIES["Q3"], budget=1e9)
+    time_only = raqo.joint(TPCH_QUERIES["Q3"], objective="time")
+    money_only = raqo.joint(TPCH_QUERIES["Q3"], objective="money")
+    assert rich.plan.total_cost == pytest.approx(time_only.plan.total_cost)
+    assert rich.stats.configs_explored == time_only.stats.configs_explored
+    if money_only.stats.configs_explored != \
+            time_only.stats.configs_explored:
+        assert rich.stats.configs_explored != \
+            money_only.stats.configs_explored
+
+
+def test_hill_climb_multi_all_inf_returns_config():
+    """Scalar multi-start path must return a config (with inf cost) on an
+    all-infeasible plateau, like single-start hill_climb does."""
+    cluster = paper_cluster(5, 5)
+    res, cost = hill_climb_multi(lambda r: math.inf, cluster)
+    assert res is not None and math.isinf(cost)
+
+
+def test_hill_climb_multi_snaps_start_like_scalar():
+    """Scalar and batched climbs must snap the same off-grid start to the
+    same configuration (shared snap_to_grid), so both backends explore the
+    same basin."""
+    cluster = ClusterConditions(dims=(ResourceDim("a", 1, 5, step=2),
+                                      ResourceDim("b", 1, 3)))
+    fn = lambda r: 0.0 if r == (5, 1) else float(r[0])   # noqa: E731
+    batch = lambda a: np.where((a[:, 0] == 5) & (a[:, 1] == 1),  # noqa
+                               0.0, a[:, 0].astype(float))
+    start = [(4, 1)]                    # off-grid on the step-2 dim
+    r_scalar, _ = hill_climb_multi(fn, cluster, starts=start)
+    r_batched, _ = hill_climb_multi(fn, cluster, starts=start,
+                                    batch_cost_fn=batch)
+    assert r_scalar == r_batched

@@ -77,3 +77,35 @@ def test_explicit_grid_dims():
     fn = lambda r: abs(r[0] - 8) + abs(r[1] - 2)  # noqa
     res, cost = hill_climb(fn, dims)
     assert res == (8, 2) and cost == 0
+
+
+def test_off_grid_start_is_snapped():
+    """Regression: hill_climb with a start not on an explicit-values grid
+    used to crash in _apply_step (dim.values.index raised ValueError)."""
+    dims = ClusterConditions(dims=(
+        ResourceDim("p2", 1, 16, values=(1, 2, 4, 8, 16)),
+        ResourceDim("lin", 1, 4),
+    ))
+    fn = lambda r: abs(r[0] - 8) + abs(r[1] - 2)  # noqa: E731
+    res, cost = hill_climb(fn, dims, start=(5, 3))   # 5 is not on the grid
+    assert res == (8, 2) and cost == 0
+
+
+def test_off_grid_start_on_stepped_dim():
+    dims = ClusterConditions(dims=(
+        ResourceDim("a", 1, 9, step=3),              # grid 1, 4, 7
+        ResourceDim("b", 1, 4),
+    ))
+    fn = lambda r: abs(r[0] - 4) + abs(r[1] - 2)  # noqa: E731
+    res, cost = hill_climb(fn, dims, start=(9, 2))   # snaps inside the grid
+    assert res == (4, 2) and cost == 0
+
+
+def test_multi_start_beats_single_on_two_basins():
+    from repro.core.hillclimb import hill_climb_multi
+    cluster = paper_cluster(20, 8)
+    fn = lambda r: min((r[0] - 3) ** 2 + (r[1] - 2) ** 2 + 5,   # noqa: E731
+                       (r[0] - 19) ** 2 + (r[1] - 7) ** 2)
+    _, single = hill_climb(fn, cluster)              # min-corner start: 5
+    res, multi = hill_climb_multi(fn, cluster)       # min+max starts: 0
+    assert multi <= single and multi == 0 and res == (19, 7)

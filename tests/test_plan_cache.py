@@ -81,3 +81,17 @@ def test_snap_to_grid():
     cluster = paper_cluster(100, 10)
     assert snap_to_grid((150, 12), cluster) == (100, 10)
     assert snap_to_grid((0, 0), cluster) == (1, 1)
+
+
+def test_snap_to_grid_clamps_stepped_dims_inside_range():
+    """Regression: lo + round((v-lo)/step)*step could overshoot hi when
+    (hi - lo) is not a multiple of step, returning an out-of-range config."""
+    from repro.core.cluster import ClusterConditions, ResourceDim
+    cluster = ClusterConditions(dims=(
+        ResourceDim("a", 1, 9, step=3),              # grid 1, 4, 7
+        ResourceDim("b", 1, 10, step=4),             # grid 1, 5, 9
+    ))
+    for cfg in ((9, 11), (8, 8), (100, 100), (6, 7), (0, 0)):
+        got = snap_to_grid(cfg, cluster)
+        assert cluster.neighbors_ok(got), f"{cfg} snapped off-grid to {got}"
+    assert snap_to_grid((9, 11), cluster) == (7, 9)
