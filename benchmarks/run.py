@@ -3,6 +3,13 @@ table.  Prints ``name,us_per_call,derived`` CSV and archives JSON.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig13      # substring filter
+    PYTHONPATH=src python -m benchmarks.run --report   # trend report
+
+``--report`` merges every ``BENCH_*.json`` at the repo root plus
+``artifacts/bench_results.json`` into one trajectory report
+(``artifacts/bench_report.json`` + ``.md``): a flat metric table for the
+current state and, for bench files that append per-run ``history``
+snapshots (resource_planning_bench does), a trend table across runs/PRs.
 """
 from __future__ import annotations
 
@@ -12,9 +19,93 @@ import time
 import traceback
 from pathlib import Path
 
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _flatten(prefix: str, obj, rows: list) -> None:
+    """Flatten nested dicts/lists of scalars into (metric, value) rows."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _flatten(f"{prefix}.{k}" if prefix else str(k), v, rows)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _flatten(f"{prefix}[{i}]", v, rows)
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        rows.append((prefix, float(obj)))
+
+
+def report() -> None:
+    """Merge BENCH_*.json + artifacts/bench_results.json into one
+    markdown/JSON trend table (the cross-PR perf trajectory)."""
+    metrics: list = []
+    trends: dict = {}
+    sources: list = []
+    for f in sorted(ROOT.glob("BENCH_*.json")):
+        try:
+            data = json.loads(f.read_text())
+        except json.JSONDecodeError:
+            continue
+        sources.append(f.name)
+        history = data.pop("history", None) if isinstance(data, dict) \
+            else None
+        _flatten(f.stem, data, metrics)
+        if history:
+            keys = sorted({k for snap in history for k, v in snap.items()
+                           if isinstance(v, (int, float))
+                           and not isinstance(v, bool)})
+            trends[f.stem] = {
+                "runs": [snap.get("ts", f"run{i}")
+                         for i, snap in enumerate(history)],
+                "series": {k: [snap.get(k) for snap in history]
+                           for k in keys},
+            }
+    bench_results = ROOT / "artifacts" / "bench_results.json"
+    if bench_results.exists():
+        try:
+            rows = json.loads(bench_results.read_text())
+            sources.append("artifacts/bench_results.json")
+            for r in rows:
+                # skip only the harness's ERROR sentinel rows, not any
+                # legitimately negative metric
+                if isinstance(r, dict) and \
+                        isinstance(r.get("value"), (int, float)) and \
+                        not str(r.get("derived", "")).startswith("ERROR"):
+                    metrics.append((r["name"], float(r["value"])))
+        except (json.JSONDecodeError, TypeError, KeyError):
+            pass
+
+    payload = {"generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "sources": sources,
+               "metrics": [{"name": n, "value": v} for n, v in metrics],
+               "trends": trends}
+    out_dir = ROOT / "artifacts"
+    out_dir.mkdir(exist_ok=True)
+    (out_dir / "bench_report.json").write_text(
+        json.dumps(payload, indent=1) + "\n")
+
+    md = ["# Bench trajectory report", "",
+          f"Generated {payload['generated']} from: "
+          + ", ".join(sources), "", "## Current metrics", "",
+          "| metric | value |", "|---|---|"]
+    md += [f"| {n} | {v:.6g} |" for n, v in metrics]
+    for stem, t in trends.items():
+        md += ["", f"## Trend: {stem}", "",
+               "| metric | " + " | ".join(t["runs"]) + " |",
+               "|---|" + "---|" * len(t["runs"])]
+        for k, series in t["series"].items():
+            cells = " | ".join("" if v is None else f"{v:.6g}"
+                               for v in series)
+            md.append(f"| {k} | {cells} |")
+    (out_dir / "bench_report.md").write_text("\n".join(md) + "\n")
+    print(f"wrote {out_dir / 'bench_report.json'} and .md "
+          f"({len(metrics)} metrics, {len(trends)} trend series)")
+
 
 def main() -> None:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    if "--report" in sys.argv[1:]:
+        report()
+        return
     from benchmarks import (paper_figs, resource_planning_bench,
                             roofline_table, tpu_planner)
 

@@ -57,4 +57,39 @@ def run() -> List[Row]:
     rows.append(("tpu.cache_sweep_configs", float(explored),
                  f"{(time.perf_counter()-t0)*1e3:.1f}ms for "
                  f"{len(ARCHS)} archs, hits={d.stats.cache_hits}"))
+    rows += backend_rows()
+    return rows
+
+
+def backend_rows() -> List[Row]:
+    """numpy-vs-jax PlanBackend on the TPU joint search: steady-state
+    planner wall time (compile amortized by a warm-up call) and plan
+    agreement, plus the vectorized ensemble mode."""
+    rows: List[Row] = []
+    cfg, shape = get_config("deepseek-67b"), get_shape("train_4k")
+    decisions = {}
+    from repro.core.planning_backend import have_jax
+    backends = ["numpy"] + (["jax"] if have_jax() else [])
+    for be in backends:
+        for mode in ("hillclimb", "ensemble", "brute"):
+            p = ShardingPlanner(resource_planning=mode, backend=be)
+            p.joint(cfg, shape)                  # warm-up (jit compile)
+            t0 = time.perf_counter()
+            reps = 5
+            for _ in range(reps):
+                d = p.joint(cfg, shape)
+            dt = (time.perf_counter() - t0) / reps * 1e3
+            decisions[(be, mode)] = d
+            rows.append((
+                f"tpu.backend.{be}.{mode}_ms", dt,
+                f"joint() steady-state, r={d.resources.as_tuple()} "
+                f"obj={d.objective_value:.4g}"))
+    # cross-backend agreement is reported, not asserted: float32 jax may
+    # legitimately break a near-tie differently than float64 numpy, and
+    # run() must never abort the benchmarks/run.py sweep
+    mismatches = sum(
+        1 for (be, mode), d in decisions.items()
+        if d.resources != decisions[("numpy", mode)].resources)
+    rows.append(("tpu.backend.plan_mismatches", float(mismatches),
+                 "jax-vs-numpy plan disagreements (fp near-ties; 0 ideal)"))
     return rows

@@ -13,6 +13,9 @@ from repro.core.hillclimb import (argmin_grid, brute_force,  # noqa: F401
                                   enumerate_configs, hill_climb,
                                   hill_climb_multi)
 from repro.core.plan_cache import ResourcePlanCache  # noqa: F401
+from repro.core.planning_backend import (JaxPlanBackend,  # noqa: F401
+                                         NumpyPlanBackend, PlanBackend,
+                                         get_backend)
 from repro.core.plans import IMPLS, OperatorCosting, PlanNode  # noqa: F401
 from repro.core.raqo import RAQO, JointPlan  # noqa: F401
 from repro.core.schema import (Schema, TPCH_QUERIES, random_query,  # noqa: F401

@@ -19,12 +19,18 @@ Three layers:
 Every model exposes two evaluation paths with bit-identical arithmetic:
 
 * ``cost(ss, cs, nc, ls)``   — one configuration, scalar floats.
-* ``cost_grid(ss, ls, configs)`` — an ``(N, 2)`` array of ``(nc, cs)``
-  configurations evaluated in a single vectorized call.  Both paths share
-  the same elementwise expression (same operation order), so a batched
-  argmin over the grid selects exactly the configuration the scalar loop
-  would — the property the planners rely on when they swap the inner
-  resource-planning loop for an array program.
+* ``cost_grid(ss, ls, configs, xp=np)`` — an ``(N, 2)`` array of
+  ``(nc, cs)`` configurations evaluated in a single vectorized call.
+  Both paths share the same elementwise expression (same operation
+  order), so a batched argmin over the grid selects exactly the
+  configuration the scalar loop would — the property the planners rely on
+  when they swap the inner resource-planning loop for an array program.
+
+The ``xp`` parameter selects the array namespace (numpy by default,
+``jax.numpy`` for the jitted ``JaxPlanBackend``); with ``xp=jnp`` the
+grid expression is traceable, so ``ss``/``ls`` may be traced scalars and
+the whole cost surface fuses into the search program
+(repro.core.planning_backend).
 """
 from __future__ import annotations
 
@@ -42,21 +48,37 @@ def feature_vector(ss: float, cs: float, nc: float) -> np.ndarray:
                     dtype=np.float64)
 
 
-def _split_configs(configs) -> Tuple[np.ndarray, np.ndarray]:
+def _split_configs(configs, xp=np) -> Tuple[np.ndarray, np.ndarray]:
     """(N, 2) array of (nc, cs) resource configurations -> float columns."""
-    a = np.asarray(configs, dtype=np.float64)
+    a = xp.asarray(configs)
     if a.ndim != 2 or a.shape[1] != 2:
         raise ValueError(f"expected (N, 2) (nc, cs) configs, got {a.shape}")
-    return a[:, 0], a[:, 1]
+    if xp is np:
+        a = a.astype(np.float64)
+        return a[:, 0], a[:, 1]
+    # jax: weak-promote the integer columns to the default float dtype
+    one = xp.asarray(1.0)
+    return a[:, 0] * one, a[:, 1] * one
 
 
-def _oom_mask(oom_fn, ss: float, cs: np.ndarray) -> np.ndarray:
+def _oom_mask(oom_fn, ss, cs, xp=np):
     """Vectorize an (ss, cs) -> bool OOM predicate over a cs column."""
+    if xp is not np:            # traced path: predicate must be elementwise
+        return oom_fn(ss, cs)
     try:
         m = oom_fn(ss, cs)
-        return np.broadcast_to(np.asarray(m, dtype=bool), cs.shape)
+        return np.broadcast_to(np.asarray(m, dtype=bool), np.shape(cs))
     except (TypeError, ValueError):          # non-numpy-compatible predicate
         return np.array([bool(oom_fn(ss, float(c))) for c in cs])
+
+
+def _sort_log2(total, xp=np):
+    """log2 term of the external-sort cost; scalar ``total`` keeps the
+    exact math.log2 arithmetic of the scalar path, traced ``total`` uses
+    the xp equivalent."""
+    if isinstance(total, (int, float)):
+        return math.log2(max(total * 8, 2))
+    return xp.log2(xp.maximum(total * 8.0, 2.0))
 
 
 # --- the paper's published coefficients (§VI-A), verbatim ------------------- #
@@ -95,12 +117,12 @@ class RegressionModel:
             return math.inf
         return max(float(self._eval(ss, cs, nc)), self.floor)
 
-    def cost_grid(self, ss: float, ls: float, configs) -> np.ndarray:
+    def cost_grid(self, ss, ls, configs, xp=np):
         """Vectorized ``cost`` over an (N, 2) array of (nc, cs) configs."""
-        nc, cs = _split_configs(configs)
-        out = np.maximum(self._eval(ss, cs, nc), self.floor)
+        nc, cs = _split_configs(configs, xp)
+        out = xp.maximum(self._eval(ss, cs, nc), self.floor)
         if self.oom_fn is not None:
-            out = np.where(_oom_mask(self.oom_fn, ss, cs), np.inf, out)
+            out = xp.where(_oom_mask(self.oom_fn, ss, cs, xp), xp.inf, out)
         return out
 
     @classmethod
@@ -169,29 +191,26 @@ class HiveSimulator:
 
     # -- vectorized twins: identical expressions over (nc, cs) columns ------ #
 
-    def smj_grid(self, ss: float, ls: float, cs: np.ndarray,
-                 nc: np.ndarray) -> np.ndarray:
+    def smj_grid(self, ss, ls, cs, nc, xp=np):
         total = ss + ls
         shuffle = total / (self.net_gbps * nc)
         per_c = total / nc
-        spill = np.maximum(1.0, per_c / np.maximum(cs * 0.5, 1e-3))
-        sort = self.sort_const * total * math.log2(max(total * 8, 2)) \
+        spill = xp.maximum(1.0, per_c / xp.maximum(cs * 0.5, 1e-3))
+        sort = self.sort_const * total * _sort_log2(total, xp) \
             * spill / (self.disk_gbps * 80 * nc)
         merge = total / (self.probe_gbps * nc)
         return self.container_startup_s + shuffle + sort + merge
 
-    def bhj_grid(self, ss: float, ls: float, cs: np.ndarray,
-                 nc: np.ndarray) -> np.ndarray:
+    def bhj_grid(self, ss, ls, cs, nc, xp=np):
         broadcast = ss * nc / (self.net_gbps * nc) + ss / self.net_gbps * 0.1
         build = ss / self.build_gbps
         probe = ls / (self.probe_gbps * nc)
         out = self.container_startup_s + broadcast + build + probe
-        return np.where(ss > self.bhj_mem_frac * cs, np.inf, out)
+        return xp.where(ss > self.bhj_mem_frac * cs, xp.inf, out)
 
-    def cost_grid(self, impl: str, ss: float, ls: float, cs: np.ndarray,
-                  nc: np.ndarray) -> np.ndarray:
-        return self.smj_grid(ss, ls, cs, nc) if impl == "SMJ" else \
-            self.bhj_grid(ss, ls, cs, nc)
+    def cost_grid(self, impl: str, ss, ls, cs, nc, xp=np):
+        return self.smj_grid(ss, ls, cs, nc, xp) if impl == "SMJ" else \
+            self.bhj_grid(ss, ls, cs, nc, xp)
 
     # "profile runs" -> training data for regression / decision trees
     def profile(self, ss_grid, cs_grid, nc_grid, ls: float = 74.0):
@@ -240,9 +259,11 @@ class SimulatorCostModel:
     def cost(self, ss: float, cs: float, nc: float, ls: float = 74.0) -> float:
         return self.sim.cost(self.name, ss, max(ls, ss), cs, nc)
 
-    def cost_grid(self, ss: float, ls: float, configs) -> np.ndarray:
-        nc, cs = _split_configs(configs)
-        return self.sim.cost_grid(self.name, ss, max(ls, ss), cs, nc)
+    def cost_grid(self, ss, ls, configs, xp=np):
+        nc, cs = _split_configs(configs, xp)
+        big = max(ls, ss) if isinstance(ls, (int, float)) \
+            and isinstance(ss, (int, float)) else xp.maximum(ls, ss)
+        return self.sim.cost_grid(self.name, ss, big, cs, nc, xp)
 
 
 def simulator_cost_models(sim: HiveSimulator | None = None

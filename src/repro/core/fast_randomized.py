@@ -136,9 +136,22 @@ def fast_randomized_plan(schema: Schema, tables: Sequence[str],
                          costing: OperatorCosting, *,
                          iterations: int = 10, population: int = 4,
                          eps: float = 0.05, seed: int = 0,
-                         impls: Sequence[str] = IMPLS
+                         impls: Sequence[str] = IMPLS,
+                         backend=None
                          ) -> Tuple[Optional[PlanNode], ParetoArchive]:
-    """Returns (best-time plan, Pareto archive over (time, money))."""
+    """Returns (best-time plan, Pareto archive over (time, money)).
+
+    ``backend`` (optional) overrides the array-search backend used for
+    per-operator resource planning for this run (planning_backend)."""
+    if backend is not None:
+        saved = costing.backend
+        costing.backend = backend
+        try:
+            return fast_randomized_plan(
+                schema, tables, costing, iterations=iterations,
+                population=population, eps=eps, seed=seed, impls=impls)
+        finally:
+            costing.backend = saved
     costing.begin_query()        # fresh per-query resource-plan memo
     rng = random.Random(seed)
     archive = ParetoArchive(eps=eps)

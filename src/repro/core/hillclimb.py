@@ -12,6 +12,11 @@ initialized on line 2 of the paper's listing.
 
 Batched backends
 ----------------
+The vectorized search primitives live in ``repro.core.planning_backend``
+(the backend-agnostic array-planning layer shared by the DB and TPU
+domains); this module keeps the scalar Algorithm 1 and thin wrappers that
+delegate batched work to a ``PlanBackend``.
+
 ``brute_force`` accepts an optional ``batch_cost_fn`` that evaluates an
 ``(N, n_dims)`` array of configurations in one vectorized call; the grid is
 then scanned in bounded-memory chunks (``argmin_grid``) instead of one
@@ -32,14 +37,17 @@ from __future__ import annotations
 import math
 from typing import Callable, List, Optional, Sequence, Tuple
 
-import numpy as np
-
 from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.plan_cache import snap_to_grid
+from repro.core.planning_backend import (DEFAULT_CHUNK, BatchCostFn,
+                                         enumerate_configs, get_backend,
+                                         grid_arrays)
+
+__all__ = ["hill_climb", "hill_climb_multi", "brute_force", "argmin_grid",
+           "enumerate_configs", "grid_arrays", "get_discrete_steps",
+           "BatchCostFn", "CANDIDATE_STEPS"]
 
 CANDIDATE_STEPS = (-1, 1)
-
-BatchCostFn = Callable[[np.ndarray], np.ndarray]
 
 
 def get_discrete_steps(cluster: ClusterConditions) -> List[int]:
@@ -109,47 +117,21 @@ def hill_climb(cost_fn: Callable[[Tuple[int, ...]], float],
 
 
 # ------------------------- batched grid machinery -------------------------- #
-
-def grid_arrays(cluster: ClusterConditions) -> List[np.ndarray]:
-    """Per-dimension value grids as int64 arrays."""
-    return [np.asarray(d.grid(), dtype=np.int64) for d in cluster.dims]
-
-
-def enumerate_configs(cluster: ClusterConditions, lo: int = 0,
-                      hi: Optional[int] = None) -> np.ndarray:
-    """Rows [lo, hi) of the full resource grid as an (M, n_dims) int array,
-    in the exact order ``cluster.all_configs()`` yields tuples (row-major:
-    first dimension slowest)."""
-    grids = grid_arrays(cluster)
-    shape = tuple(len(g) for g in grids)
-    total = int(np.prod(shape)) if shape else 0
-    hi = total if hi is None else min(hi, total)
-    flat = np.arange(lo, hi, dtype=np.int64)
-    idx = np.unravel_index(flat, shape)
-    return np.stack([g[i] for g, i in zip(grids, idx)], axis=1)
-
+# The implementations live in planning_backend (NumpyPlanBackend /
+# JaxPlanBackend); these wrappers keep the historical hillclimb API and
+# thread an optional backend selection through it.
 
 def argmin_grid(batch_cost_fn: BatchCostFn, cluster: ClusterConditions,
                 stats: Optional[PlanningStats] = None,
-                chunk_size: int = 1 << 20
+                chunk_size: int = DEFAULT_CHUNK, *,
+                backend=None, params=None
                 ) -> Tuple[Optional[Tuple[int, ...]], float]:
     """Exhaustive vectorized scan of the grid in bounded-memory chunks.
     Returns the first (in ``all_configs`` order) strict minimum, matching
     the scalar ``brute_force`` tie-breaking; (None, inf) if every
     configuration costs inf."""
-    stats = stats if stats is not None else PlanningStats()
-    total = cluster.grid_size()
-    best_cfg: Optional[Tuple[int, ...]] = None
-    best_cost = math.inf
-    for lo in range(0, total, chunk_size):
-        cfgs = enumerate_configs(cluster, lo, lo + chunk_size)
-        costs = np.asarray(batch_cost_fn(cfgs), dtype=np.float64)
-        stats.configs_explored += len(cfgs)
-        i = int(np.argmin(costs))
-        if costs[i] < best_cost:
-            best_cfg = tuple(int(v) for v in cfgs[i])
-            best_cost = float(costs[i])
-    return best_cfg, best_cost
+    return get_backend(backend).argmin_grid(
+        batch_cost_fn, cluster, stats, params=params, chunk_size=chunk_size)
 
 
 def brute_force(cost_fn: Callable[[Tuple[int, ...]], float],
@@ -157,7 +139,8 @@ def brute_force(cost_fn: Callable[[Tuple[int, ...]], float],
                 stats: Optional[PlanningStats] = None,
                 *,
                 batch_cost_fn: Optional[BatchCostFn] = None,
-                chunk_size: int = 1 << 20
+                chunk_size: int = DEFAULT_CHUNK,
+                backend=None, params=None
                 ) -> Tuple[Optional[Tuple[int, ...]], float]:
     """Exhaustive search over the resource grid (paper §VI-B1).
 
@@ -166,7 +149,8 @@ def brute_force(cost_fn: Callable[[Tuple[int, ...]], float],
     Python call per configuration; results are identical."""
     stats = stats if stats is not None else PlanningStats()
     if batch_cost_fn is not None:
-        return argmin_grid(batch_cost_fn, cluster, stats, chunk_size)
+        return argmin_grid(batch_cost_fn, cluster, stats, chunk_size,
+                           backend=backend, params=params)
     best, best_cost = None, float("inf")
     for cfg in cluster.all_configs():
         stats.configs_explored += 1
@@ -176,36 +160,30 @@ def brute_force(cost_fn: Callable[[Tuple[int, ...]], float],
     return best, best_cost
 
 
-def _snap_to_indices(cfg: Sequence[int], cluster: ClusterConditions,
-                     grids: List[np.ndarray]) -> List[int]:
-    # go through snap_to_grid so scalar and batched climbs snap an
-    # off-grid start to the *same* configuration; the result is exactly on
-    # the grid, so argmin finds the exact index
-    snapped = snap_to_grid(tuple(cfg), cluster)
-    return [int(np.argmin(np.abs(g - v))) for g, v in zip(grids, snapped)]
-
-
 def hill_climb_multi(cost_fn: Callable[[Tuple[int, ...]], float],
                      cluster: ClusterConditions,
                      starts: Optional[Sequence[Sequence[int]]] = None,
                      stats: Optional[PlanningStats] = None,
                      *,
                      batch_cost_fn: Optional[BatchCostFn] = None,
-                     max_iters: int = 100_000
+                     max_iters: int = 100_000,
+                     backend=None, params=None,
+                     n_random: int = 0, seed: int = 0
                      ) -> Tuple[Tuple[int, ...], float]:
     """Multi-start hill climbing; returns the best local optimum found.
 
     Default starts are the smallest and largest configurations (the two
-    corners that bracket 1/x-shaped cost surfaces).  Without a batch
-    backend this runs Algorithm 1 once per start; with one, all ±1
-    neighbors of all still-active starts are costed per iteration as a
-    single vectorized batch.
+    corners that bracket 1/x-shaped cost surfaces), plus ``n_random``
+    uniform grid starts (the vectorized multi-start *ensemble*).  Without
+    a batch backend this runs Algorithm 1 once per start; with one, the
+    selected ``PlanBackend`` costs all ±1 neighbors of all still-active
+    starts per iteration as a single vectorized batch.
     """
     stats = stats if stats is not None else PlanningStats()
-    if starts is None:
-        starts = (cluster.min_config(), cluster.max_config())
 
     if batch_cost_fn is None:
+        if starts is None:
+            starts = (cluster.min_config(), cluster.max_config())
         best, best_cost = None, math.inf
         for s in starts:
             res, cost = hill_climb(cost_fn, cluster, start=s, stats=stats,
@@ -216,44 +194,6 @@ def hill_climb_multi(cost_fn: Callable[[Tuple[int, ...]], float],
                 best, best_cost = res, cost
         return best, best_cost
 
-    grids = grid_arrays(cluster)
-    sizes = np.array([len(g) for g in grids], dtype=np.int64)
-    n_dims = len(grids)
-
-    def values_of(idx: np.ndarray) -> np.ndarray:
-        return np.stack([grids[d][idx[:, d]] for d in range(n_dims)], axis=1)
-
-    cur = np.array([_snap_to_indices(s, cluster, grids) for s in starts],
-                   dtype=np.int64)                       # (S, n_dims)
-    cur_cost = np.asarray(batch_cost_fn(values_of(cur)), dtype=np.float64)
-    stats.configs_explored += len(cur)
-    active = np.ones(len(cur), dtype=bool)
-
-    for _ in range(max_iters):
-        act = np.flatnonzero(active)
-        if act.size == 0:
-            break
-        # every ±1 neighbor of every active point: (A, 2*n_dims, n_dims)
-        nbr = np.repeat(cur[act][:, None, :], 2 * n_dims, axis=1)
-        for d in range(n_dims):
-            nbr[:, 2 * d, d] -= 1
-            nbr[:, 2 * d + 1, d] += 1
-        flat = nbr.reshape(-1, n_dims)
-        valid = ((flat >= 0) & (flat < sizes)).all(axis=1)
-        costs = np.full(len(flat), np.inf)
-        if valid.any():
-            costs[valid] = batch_cost_fn(values_of(flat[valid]))
-            stats.configs_explored += int(valid.sum())
-        costs = costs.reshape(act.size, 2 * n_dims)
-        best_j = np.argmin(costs, axis=1)
-        best_c = costs[np.arange(act.size), best_j]
-        improved = best_c < cur_cost[act]
-        moved = act[improved]
-        cur[moved] = nbr[improved, best_j[improved]]
-        cur_cost[moved] = best_c[improved]
-        active[:] = False
-        active[moved] = True
-
-    i = int(np.argmin(cur_cost))
-    res = tuple(int(v) for v in values_of(cur[i:i + 1])[0])
-    return res, float(cur_cost[i])
+    return get_backend(backend).hill_climb_ensemble(
+        batch_cost_fn, cluster, starts, stats, params=params,
+        n_random=n_random, seed=seed, max_iters=max_iters)

@@ -1,0 +1,436 @@
+"""Backend-agnostic array-planning layer: one search engine for both domains.
+
+The paper's architecture (Fig. 8) inserts resource planning *inside* the
+query optimizer's cost loop, which only works if planning a resource
+configuration is about as cheap as evaluating a cost model once (§VII
+reports up to 16x overhead reduction, scaling to 100K-container clusters).
+This module is that engine, factored out of the per-domain planners: the
+DB-domain ``OperatorCosting`` (plans.py) and the TPU-domain
+``ShardingPlanner`` (sharding_planner.py) both drive the same three
+primitives over a discrete resource grid (``ClusterConditions``):
+
+    enumerate_configs   row [lo, hi) slices of the full grid, in
+                        ``all_configs`` order (tie-breaking contract)
+    argmin_grid         exhaustive scan in bounded-memory chunks
+                        (the vectorized form of §VI-B1 brute force)
+    hill_climb_ensemble multi-start steepest-descent climbing: every ±1
+                        neighbor of every active start costed per
+                        iteration as ONE batch (the batched form of
+                        Algorithm 1, §VI-B2, generalised from 2 corner
+                        starts to an ensemble of random starts)
+
+Two implementations of the ``PlanBackend`` protocol:
+
+* ``NumpyPlanBackend`` — float64 chunked numpy.  Arithmetic is
+  bit-identical to the scalar Python loops (cost models share one
+  elementwise expression between scalar and grid paths), so batched and
+  scalar search return the *same* argmin, ties included.
+* ``JaxPlanBackend`` — jax.jit-compiled.  The grid-chunk scan and the
+  whole ensemble climb (a ``lax.while_loop``) each run as one fused XLA
+  program, so the roofline cost models fuse with the search itself.
+  Programs are cached per (cost-fn object, grid): callers that reuse
+  their batch-cost function across plan requests pay tracing/compilation
+  once and amortise it over every subsequent operator (the paper's
+  recurring-job story, §V).  Scalar parameters that vary per request
+  (data sizes, budgets) are *traced arguments* — pass them via
+  ``params`` — so a new (ss, ls) does not recompile.
+
+Batch-cost-fn contract
+----------------------
+``fn(configs)`` or ``fn(configs, params)`` -> costs, where ``configs`` is
+an ``(N, n_dims)`` integer array of resource configurations (rows in grid
+units, e.g. ``(nc, cs)`` or ``(pods, dp, tp, microbatch)``) and ``params``
+is a small float vector of per-request scalars.  Infeasible
+configurations must cost ``inf``.  For the jax backend the fn must be
+traceable (build it from ``backend.xp`` ops; every cost model in this
+repo takes an ``xp`` argument for exactly this).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.cluster import ClusterConditions, PlanningStats
+from repro.core.plan_cache import snap_to_grid
+
+BatchCostFn = Callable[..., "np.ndarray"]
+Result = Tuple[Optional[Tuple[int, ...]], float]
+
+DEFAULT_CHUNK = 1 << 20
+
+
+# ----------------------------- grid helpers -------------------------------- #
+
+def grid_arrays(cluster: ClusterConditions) -> List[np.ndarray]:
+    """Per-dimension value grids as int64 arrays."""
+    return [np.asarray(d.grid(), dtype=np.int64) for d in cluster.dims]
+
+
+def enumerate_configs(cluster: ClusterConditions, lo: int = 0,
+                      hi: Optional[int] = None) -> np.ndarray:
+    """Rows [lo, hi) of the full resource grid as an (M, n_dims) int array,
+    in the exact order ``cluster.all_configs()`` yields tuples (row-major:
+    first dimension slowest)."""
+    grids = grid_arrays(cluster)
+    shape = tuple(len(g) for g in grids)
+    total = int(np.prod(shape)) if shape else 0
+    hi = total if hi is None else min(hi, total)
+    flat = np.arange(lo, hi, dtype=np.int64)
+    idx = np.unravel_index(flat, shape)
+    return np.stack([g[i] for g, i in zip(grids, idx)], axis=1)
+
+
+def start_indices(cluster: ClusterConditions,
+                  starts: Optional[Sequence[Sequence[int]]],
+                  n_random: int, seed: int) -> np.ndarray:
+    """Ensemble start points as grid *indices* (S, n_dims).
+
+    Defaults to the min+max corners (the two starts bracketing 1/x-shaped
+    cost surfaces) plus ``n_random`` uniform grid points.  Explicit
+    ``starts`` (config values, possibly off-grid) are snapped through
+    ``snap_to_grid`` so every backend explores the same basins.  Both
+    backends draw from the same seeded numpy generator, so numpy and jax
+    ensembles are start-for-start identical.
+    """
+    grids = grid_arrays(cluster)
+    if starts is None:
+        base = [cluster.min_config(), cluster.max_config()]
+    else:
+        base = [tuple(s) for s in starts]
+    idx = [_snap_to_indices(s, cluster, grids) for s in base]
+    if n_random > 0:
+        rng = np.random.default_rng(seed)
+        rand = np.stack([rng.integers(0, len(g), size=n_random)
+                         for g in grids], axis=1)
+        idx.extend(rand.tolist())
+    # dedupe while preserving order (corners first)
+    seen, uniq = set(), []
+    for row in idx:
+        t = tuple(int(v) for v in row)
+        if t not in seen:
+            seen.add(t)
+            uniq.append(t)
+    return np.asarray(uniq, dtype=np.int64)
+
+
+def _snap_to_indices(cfg: Sequence[int], cluster: ClusterConditions,
+                     grids: List[np.ndarray]) -> List[int]:
+    # go through snap_to_grid so every backend snaps an off-grid start to
+    # the *same* configuration; the result is exactly on the grid, so
+    # argmin finds the exact index
+    snapped = snap_to_grid(tuple(cfg), cluster)
+    return [int(np.argmin(np.abs(g - v))) for g, v in zip(grids, snapped)]
+
+
+def _neighbor_offsets(n_dims: int) -> np.ndarray:
+    """(2*n_dims, n_dims) index offsets: one -1 and one +1 step per dim,
+    exactly the candidate set initialised on line 2 of Algorithm 1."""
+    offs = np.zeros((2 * n_dims, n_dims), dtype=np.int64)
+    for d in range(n_dims):
+        offs[2 * d, d] = -1
+        offs[2 * d + 1, d] = 1
+    return offs
+
+
+# ------------------------------ numpy backend ------------------------------ #
+
+class NumpyPlanBackend:
+    """Chunked float64 numpy search; bit-identical with the scalar loops."""
+
+    name = "numpy"
+    xp = np
+
+    def _call(self, fn: BatchCostFn, cfgs: np.ndarray, params) -> np.ndarray:
+        out = fn(cfgs) if params is None else fn(cfgs, params)
+        return np.asarray(out, dtype=np.float64)
+
+    def argmin_grid(self, batch_cost_fn: BatchCostFn,
+                    cluster: ClusterConditions,
+                    stats: Optional[PlanningStats] = None, *,
+                    params=None, chunk_size: int = DEFAULT_CHUNK) -> Result:
+        """Exhaustive vectorized scan of the grid in bounded-memory chunks.
+        Returns the first (in ``all_configs`` order) strict minimum,
+        matching scalar brute-force tie-breaking; (None, inf) if every
+        configuration costs inf."""
+        stats = stats if stats is not None else PlanningStats()
+        total = cluster.grid_size()
+        best_cfg: Optional[Tuple[int, ...]] = None
+        best_cost = math.inf
+        for lo in range(0, total, chunk_size):
+            cfgs = enumerate_configs(cluster, lo, lo + chunk_size)
+            costs = self._call(batch_cost_fn, cfgs, params)
+            stats.configs_explored += len(cfgs)
+            i = int(np.argmin(costs))
+            if costs[i] < best_cost:
+                best_cfg = tuple(int(v) for v in cfgs[i])
+                best_cost = float(costs[i])
+        return best_cfg, best_cost
+
+    def hill_climb_ensemble(self, batch_cost_fn: BatchCostFn,
+                            cluster: ClusterConditions,
+                            starts: Optional[Sequence[Sequence[int]]] = None,
+                            stats: Optional[PlanningStats] = None, *,
+                            params=None, n_random: int = 0, seed: int = 0,
+                            max_iters: int = 100_000) -> Result:
+        """Batched multi-start steepest-descent climbing.
+
+        Every iteration costs all ±1 neighbors of all still-active starts
+        as a single batch; a start deactivates when no neighbor improves
+        it (the same "no better neighbors exist" invariant that
+        terminates Algorithm 1).  Returns the best local optimum over the
+        ensemble."""
+        stats = stats if stats is not None else PlanningStats()
+        grids = grid_arrays(cluster)
+        sizes = np.array([len(g) for g in grids], dtype=np.int64)
+        n_dims = len(grids)
+
+        def values_of(idx: np.ndarray) -> np.ndarray:
+            return np.stack([grids[d][idx[:, d]] for d in range(n_dims)],
+                            axis=1)
+
+        cur = start_indices(cluster, starts, n_random, seed)
+        cur_cost = self._call(batch_cost_fn, values_of(cur), params)
+        stats.configs_explored += len(cur)
+        active = np.ones(len(cur), dtype=bool)
+        offs = _neighbor_offsets(n_dims)
+
+        for _ in range(max_iters):
+            act = np.flatnonzero(active)
+            if act.size == 0:
+                break
+            # every ±1 neighbor of every active point: (A, 2*n_dims, n_dims)
+            nbr = cur[act][:, None, :] + offs[None, :, :]
+            flat = nbr.reshape(-1, n_dims)
+            valid = ((flat >= 0) & (flat < sizes)).all(axis=1)
+            costs = np.full(len(flat), np.inf)
+            if valid.any():
+                costs[valid] = self._call(batch_cost_fn,
+                                          values_of(flat[valid]), params)
+                stats.configs_explored += int(valid.sum())
+            costs = costs.reshape(act.size, 2 * n_dims)
+            best_j = np.argmin(costs, axis=1)
+            best_c = costs[np.arange(act.size), best_j]
+            improved = best_c < cur_cost[act]
+            moved = act[improved]
+            cur[moved] = nbr[improved, best_j[improved]]
+            cur_cost[moved] = best_c[improved]
+            active[:] = False
+            active[moved] = True
+
+        i = int(np.argmin(cur_cost))
+        res = tuple(int(v) for v in values_of(cur[i:i + 1])[0])
+        return res, float(cur_cost[i])
+
+
+# ------------------------------- jax backend ------------------------------- #
+
+class JaxPlanBackend:
+    """jax.jit search programs; the cost model fuses with the search.
+
+    Compiled programs are memoized per (batch-cost-fn object, grid
+    signature): reuse the same fn object across requests (vary the data
+    via ``params``) and only the first request traces/compiles.  Numeric
+    note: without x64, jax computes in float32 — argmins agree with the
+    float64 backends up to fp tolerance, which is why the planners
+    re-evaluate the winning configuration through the scalar float64 path
+    before committing to it.
+    """
+
+    name = "jax"
+
+    MAX_PROGRAMS = 128                     # FIFO bound on compiled programs
+
+    def __init__(self):
+        import jax                         # noqa: F401 — fail fast if absent
+        import jax.numpy as jnp
+        self._jax = jax
+        self.xp = jnp
+        self._programs = {}                # key -> (fn_ref, compiled)
+
+    # -- program cache ------------------------------------------------------ #
+    def _program(self, kind: str, fn: BatchCostFn,
+                 cluster: ClusterConditions, extra, build):
+        key = (kind, id(fn), cluster.dims, extra)
+        hit = self._programs.get(key)
+        if hit is not None and hit[0] is fn:
+            return hit[1]
+        prog = build()
+        # bounded cache on the process-wide singleton: evict oldest first
+        # so callers that churn fresh fn closures cannot grow it without
+        # limit (reusing one fn object per cost surface stays the fast
+        # path — see the module docstring contract)
+        while len(self._programs) >= self.MAX_PROGRAMS:
+            self._programs.pop(next(iter(self._programs)))
+        # hold a strong ref to fn: keeps id(fn) valid for the cache lifetime
+        self._programs[key] = (fn, prog)
+        return prog
+
+    def _call(self, fn, cfgs, params):
+        return fn(cfgs) if params is None else fn(cfgs, params)
+
+    def _params(self, params):
+        return self.xp.asarray([] if params is None else params,
+                               dtype=self.xp.float32)
+
+    # -- chunked grid scan --------------------------------------------------- #
+    def argmin_grid(self, batch_cost_fn: BatchCostFn,
+                    cluster: ClusterConditions,
+                    stats: Optional[PlanningStats] = None, *,
+                    params=None, chunk_size: int = DEFAULT_CHUNK) -> Result:
+        """Chunk-scan the grid with one jitted program per chunk shape.
+        First-strict-minimum tie-breaking across chunks matches the numpy
+        backend; within a chunk jnp.argmin also returns the first min."""
+        jax, jnp = self._jax, self.xp
+        stats = stats if stats is not None else PlanningStats()
+        total = cluster.grid_size()
+        chunk = int(min(chunk_size, total))
+        grids_np = grid_arrays(cluster)
+        shape = tuple(len(g) for g in grids_np)
+        has_params = params is not None
+
+        def build():
+            grids = [jnp.asarray(g) for g in grids_np]
+
+            @jax.jit
+            def scan_chunk(lo, p):
+                flat = lo + jnp.arange(chunk)
+                ok = flat < total
+                safe = jnp.where(ok, flat, 0)
+                idx = jnp.unravel_index(safe, shape)
+                cfgs = jnp.stack([g[i] for g, i in zip(grids, idx)], axis=1)
+                costs = self._call(batch_cost_fn, cfgs,
+                                   p if has_params else None)
+                costs = jnp.where(ok, costs, jnp.inf)
+                j = jnp.argmin(costs)
+                return costs[j], flat[j]
+            return scan_chunk
+
+        prog = self._program("scan", batch_cost_fn, cluster,
+                             (chunk, has_params), build)
+        p = self._params(params)
+        best_cost, best_flat = math.inf, -1
+        for lo in range(0, total, chunk):
+            c, f = prog(lo, p)
+            stats.configs_explored += min(chunk, total - lo)
+            c = float(c)
+            if c < best_cost:
+                best_cost, best_flat = c, int(f)
+        if best_flat < 0:
+            return None, math.inf
+        idx = np.unravel_index(best_flat, shape)
+        return tuple(int(g[i]) for g, i in zip(grids_np, idx)), best_cost
+
+    # -- fused ensemble climb ------------------------------------------------ #
+    def hill_climb_ensemble(self, batch_cost_fn: BatchCostFn,
+                            cluster: ClusterConditions,
+                            starts: Optional[Sequence[Sequence[int]]] = None,
+                            stats: Optional[PlanningStats] = None, *,
+                            params=None, n_random: int = 0, seed: int = 0,
+                            max_iters: int = 100_000) -> Result:
+        """The whole multi-start climb — neighbor generation, batched
+        costing, steepest-descent moves, termination — as ONE jitted
+        ``lax.while_loop`` program.  No per-iteration host sync: this is
+        what makes ensembles of dozens of starts cheaper than the numpy
+        2-start climb (ROADMAP open item)."""
+        jax, jnp = self._jax, self.xp
+        stats = stats if stats is not None else PlanningStats()
+        grids_np = grid_arrays(cluster)
+        n_dims = len(grids_np)
+        cur0 = start_indices(cluster, starts, n_random, seed)
+        S = len(cur0)
+        has_params = params is not None
+
+        def build():
+            grids = [jnp.asarray(g) for g in grids_np]
+            sizes = jnp.asarray([len(g) for g in grids_np])
+            offs = jnp.asarray(_neighbor_offsets(n_dims))
+
+            def values_of(idx):
+                return jnp.stack([grids[d][idx[:, d]]
+                                  for d in range(n_dims)], axis=1)
+
+            @jax.jit
+            def climb(start_idx, p):
+                pp = p if has_params else None
+                cost0 = self._call(batch_cost_fn, values_of(start_idx), pp)
+
+                def cond(state):
+                    it, moved, _, _, _ = state
+                    return moved & (it < max_iters)
+
+                def body(state):
+                    it, _, cur, cur_cost, n_eval = state
+                    nbr = cur[:, None, :] + offs[None, :, :]   # (S, 2D, D)
+                    valid = ((nbr >= 0) & (nbr < sizes)).all(-1)
+                    flat = nbr.reshape(-1, n_dims)
+                    safe = jnp.clip(flat, 0, sizes - 1)
+                    costs = self._call(batch_cost_fn, values_of(safe), pp)
+                    costs = jnp.where(valid, costs.reshape(S, 2 * n_dims),
+                                      jnp.inf)
+                    j = jnp.argmin(costs, axis=1)
+                    best_c = jnp.take_along_axis(costs, j[:, None], 1)[:, 0]
+                    improved = best_c < cur_cost
+                    step = jnp.take_along_axis(
+                        nbr, j[:, None, None], 1)[:, 0, :]
+                    cur = jnp.where(improved[:, None], step, cur)
+                    cur_cost = jnp.where(improved, best_c, cur_cost)
+                    return (it + 1, improved.any(), cur, cur_cost,
+                            n_eval + valid.sum())
+
+                it, _, cur, cur_cost, n_eval = jax.lax.while_loop(
+                    cond, body, (jnp.int32(0), jnp.bool_(True),
+                                 start_idx, cost0, jnp.int32(0)))
+                i = jnp.argmin(cur_cost)
+                return cur[i], cur_cost[i], n_eval
+            return climb
+
+        prog = self._program("climb", batch_cost_fn, cluster,
+                             (S, max_iters, has_params), build)
+        idx, cost, n_eval = prog(jnp.asarray(cur0), self._params(params))
+        idx = np.asarray(idx)
+        # in-bounds cost evaluations actually performed (the fused loop
+        # re-costs converged starts too; that is real work, so count it)
+        stats.configs_explored += S + int(n_eval)
+        res = tuple(int(grids_np[d][idx[d]]) for d in range(n_dims))
+        return res, float(cost)
+
+
+PlanBackend = Union[NumpyPlanBackend, JaxPlanBackend]
+
+_SINGLETONS = {}
+
+
+def have_jax() -> bool:
+    """Whether the jax backend can be constructed on this host."""
+    try:
+        get_backend("jax")
+        return True
+    except ImportError:
+        return False
+
+
+def get_backend(spec: Union[str, PlanBackend, None] = None) -> PlanBackend:
+    """Resolve a backend selection: None/"numpy", "jax", "auto" (jax if
+    importable, else numpy), or an already-constructed backend instance.
+    String selections return process-wide singletons so compiled-program
+    caches are shared."""
+    if spec is None:
+        spec = "numpy"
+    if not isinstance(spec, str):
+        return spec
+    if spec == "auto":
+        try:
+            return get_backend("jax")
+        except ImportError:
+            return get_backend("numpy")
+    if spec not in _SINGLETONS:
+        if spec == "numpy":
+            _SINGLETONS[spec] = NumpyPlanBackend()
+        elif spec == "jax":
+            _SINGLETONS[spec] = JaxPlanBackend()
+        else:
+            raise ValueError(f"unknown plan backend {spec!r} "
+                             "(expected 'numpy', 'jax', or 'auto')")
+    return _SINGLETONS[spec]

@@ -15,20 +15,31 @@ as one batch.  Results of full-grid planning are memoized per
 (impl, ss, ls, objective) across the operators of one query
 (``begin_query`` resets the memo), independently of the cross-query
 resource-plan cache.
+
+Backend selection (repro.core.planning_backend): ``backend="numpy"``
+(default — float64, bit-identical with the scalar loops) or
+``backend="jax"`` runs the same searches through jit-compiled programs.
+On the jax backend the per-operator data characteristics (ss, ls) are
+*traced arguments*, so one compiled program per (impl, objective) serves
+every operator of every query — the cost model fuses with the search.
+``resource_planning="ensemble"`` climbs a vectorized multi-start
+ensemble (min/max corners + ``ensemble_starts`` random grid starts,
+every ±1 neighbor of every start costed as one batch per iteration).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, FrozenSet, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.cost_model import (HiveSimulator, RegressionModel,
-                                   monetary_cost)
+                                   _split_configs, monetary_cost)
 from repro.core.hillclimb import brute_force, hill_climb, hill_climb_multi
 from repro.core.plan_cache import ResourcePlanCache
+from repro.core.planning_backend import PlanBackend, get_backend
 from repro.core.schema import Schema
 
 GB = 1 << 30
@@ -105,16 +116,24 @@ class OperatorCosting:
     """Joint query+resource costing of a single join operator."""
     models: Dict[str, RegressionModel]
     cluster: ClusterConditions
-    # hillclimb | hillclimb_batched | brute | batched | fixed
+    # hillclimb | hillclimb_batched | ensemble | brute | batched | fixed
     resource_planning: str = "hillclimb"
     fixed_resources: Tuple[int, ...] = (10, 4)
     cache: Optional[ResourcePlanCache] = None
     cache_key_round: float = 0.01            # GB rounding of data-char key
     objective: str = "time"                  # time | money
     stats: PlanningStats = dataclasses.field(default_factory=PlanningStats)
+    backend: Union[str, PlanBackend, None] = None      # None -> numpy
+    ensemble_starts: int = 24                # random starts for "ensemble"
+    seed: int = 0
     # per-query memo of planned resources, keyed (impl, ss, ls, objective)
     _plan_memo: Dict[Tuple, Tuple[Tuple[int, ...], float]] = \
         dataclasses.field(default_factory=dict, repr=False)
+    # per-(impl, objective) batch-cost fns fn(configs, [ss, ls]): reusing
+    # one fn object across operators lets the jax backend reuse compiled
+    # search programs (ss/ls travel as traced params)
+    _grid_fn_cache: Dict = dataclasses.field(default_factory=dict,
+                                             repr=False)
 
     def begin_query(self) -> None:
         """Reset the per-query resource-plan memo (planners call this once
@@ -150,6 +169,32 @@ class OperatorCosting:
             return lambda cfgs: self._op_cost_grid(impl, ss, ls, cfgs)
         return None
 
+    def _grid_fn(self, impl: str, backend: PlanBackend):
+        """Param-style batch cost surface fn(configs, params) with
+        params = [ss, ls]; one fn (and, on jax, one compiled program) per
+        (impl, objective) serves every operator."""
+        key = (impl, self.objective, backend.name)
+        fn = self._grid_fn_cache.get(key)
+        if fn is not None:
+            return fn
+        model = self.models[impl]
+        if not hasattr(model, "cost_grid"):
+            return None
+        xp = backend.xp
+        objective = self.objective
+
+        def fn(cfgs, params):
+            ss, ls = params[0], params[1]
+            t = model.cost_grid(ss, ls, cfgs, xp=xp)
+            if objective == "money":
+                nc, cs = _split_configs(cfgs, xp)
+                return xp.where(xp.isfinite(t), monetary_cost(t, cs, nc),
+                                xp.inf)
+            return t
+
+        self._grid_fn_cache[key] = fn
+        return fn
+
     def _cache_kind(self, ls: float) -> str:
         """Sub-plan kind for the resource-plan cache.  Includes the
         objective (a time-optimal config is not a money-optimal one) and a
@@ -179,20 +224,55 @@ class OperatorCosting:
                 self._plan_memo[mkey] = out
                 return out
         fn = lambda res: self._op_cost_at(impl, ss, ls, res)   # noqa: E731
-        batch_fn = self._batch_fn(impl, ss, ls)
         mode = self.resource_planning
+        backend = get_backend(self.backend)
+        # a non-default backend takes over every search mode (on numpy the
+        # historical scalar/batched paths below are already the backend)
+        grid_fn = self._grid_fn(impl, backend) \
+            if (mode == "ensemble" or backend.name != "numpy") \
+            and mode != "fixed" else None
         if mode == "fixed":
             res, cost = self.fixed_resources, fn(self.fixed_resources)
             self.stats.configs_explored += 1
+        elif grid_fn is not None:
+            # unified backend path: ss/ls travel as params, so a jax
+            # backend reuses one compiled program per (impl, objective)
+            params = np.asarray([ss, ls], dtype=np.float64)
+            before = self.stats.configs_explored
+            if mode in ("brute", "batched"):
+                res, cost = backend.argmin_grid(grid_fn, self.cluster,
+                                                self.stats, params=params)
+            else:            # ensemble | hillclimb | hillclimb_batched
+                n_random = self.ensemble_starts if mode == "ensemble" else 0
+                res, cost = backend.hill_climb_ensemble(
+                    grid_fn, self.cluster, stats=self.stats, params=params,
+                    n_random=n_random, seed=self.seed)
+            self.stats.cost_calls += self.stats.configs_explored - before
+            if res is not None:
+                # commit through the scalar float64 path (guards the
+                # float32 jax backend; exact no-op on numpy)
+                cost = fn(res)
+                if not math.isfinite(cost) and backend.name != "numpy":
+                    # float32 rounding let an infeasible-in-float64 winner
+                    # through: redo exactly on the numpy batched path so a
+                    # feasible config is never reported (or memoized) as
+                    # infeasible
+                    res, cost = brute_force(
+                        fn, self.cluster, self.stats,
+                        batch_cost_fn=self._batch_fn(impl, ss, ls))
         elif mode in ("brute", "batched"):
             # the batched backend scans the same grid with identical
             # arithmetic and tie-breaking; scalar loop is the fallback for
             # models without cost_grid
             res, cost = brute_force(fn, self.cluster, self.stats,
-                                    batch_cost_fn=batch_fn)
-        elif mode == "hillclimb_batched":
+                                    batch_cost_fn=self._batch_fn(impl, ss,
+                                                                 ls))
+        elif mode in ("hillclimb_batched", "ensemble"):
+            # ensemble lands here only for models without cost_grid: keep
+            # at least the scalar multi-start (corner) climbs
             res, cost = hill_climb_multi(fn, self.cluster, stats=self.stats,
-                                         batch_cost_fn=batch_fn)
+                                         batch_cost_fn=self._batch_fn(
+                                             impl, ss, ls))
         else:
             res, cost = hill_climb(fn, self.cluster, stats=self.stats)
         if self.cache is not None and math.isfinite(cost):

@@ -10,15 +10,16 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.cluster import ClusterConditions, PlanningStats, paper_cluster
-from repro.core.cost_model import RegressionModel, monetary_cost, paper_models
+from repro.core.cost_model import (RegressionModel, _split_configs,
+                                   monetary_cost, paper_models)
 from repro.core.fast_randomized import fast_randomized_plan
-from repro.core.hillclimb import argmin_grid
 from repro.core.plan_cache import ResourcePlanCache
+from repro.core.planning_backend import PlanBackend, get_backend
 from repro.core.plans import IMPLS, OperatorCosting, PlanNode
 from repro.core.schema import Schema
 from repro.core.selinger import selinger_plan
@@ -53,10 +54,21 @@ class RAQO:
     cluster: ClusterConditions = dataclasses.field(
         default_factory=paper_cluster)
     planner: str = "selinger"                 # selinger | fastrandomized
-    # hillclimb | hillclimb_batched | brute | batched | fixed
+    # hillclimb | hillclimb_batched | ensemble | brute | batched | fixed
     resource_planning: str = "hillclimb"
     cache: Optional[ResourcePlanCache] = None
     seed: int = 0
+    # array-search backend (planning_backend): None/"numpy" | "jax" | "auto"
+    backend: Union[str, PlanBackend, None] = None
+    # param-style SLA cost fns per impl (jax program reuse across walks)
+    _sla_fn_cache: Dict = dataclasses.field(default_factory=dict,
+                                            repr=False)
+    # shared across the OperatorCosting instances this RAQO creates: the
+    # batch-cost fns close over (model, objective) only, so reusing the
+    # fn objects across queries lets a jax backend reuse its compiled
+    # programs instead of re-tracing per optimized query
+    _grid_fn_shared: Dict = dataclasses.field(default_factory=dict,
+                                              repr=False)
 
     def _costing(self, objective: str = "time",
                  fixed: Optional[Tuple[int, ...]] = None) -> OperatorCosting:
@@ -64,7 +76,8 @@ class RAQO:
             models=self.models, cluster=self.cluster,
             resource_planning="fixed" if fixed else self.resource_planning,
             fixed_resources=fixed or (10, 4), cache=self.cache,
-            objective=objective)
+            objective=objective, backend=self.backend,
+            _grid_fn_cache=self._grid_fn_shared)
 
     def _plan(self, tables: Sequence[str], costing: OperatorCosting
               ) -> Optional[PlanNode]:
@@ -128,21 +141,53 @@ class RAQO:
 
         Uses the batched costing backend (one vectorized scan of the grid
         per operator, SLA constraint folded into the cost surface as inf)
-        when the model exposes ``cost_grid``; scalar loop otherwise."""
+        when the model exposes ``cost_grid``; scalar loop otherwise.  The
+        scan runs on the selected ``PlanBackend`` with (ss, ls, target)
+        as params, so a jax backend compiles one SLA program per impl."""
         total_money = 0.0
         root_res = None
+        backend = get_backend(self.backend)
+
+        def _sla_fn(impl: str, be):
+            fn = self._sla_fn_cache.get((impl, be.name))
+            if fn is None:
+                model = self.models[impl]
+                xp = be.xp
+
+                def fn(cfgs, params):
+                    ss, ls, target = params[0], params[1], params[2]
+                    t = model.cost_grid(ss, ls, cfgs, xp=xp)
+                    nc, cs = _split_configs(cfgs, xp)
+                    money = monetary_cost(t, cs, nc)
+                    return xp.where(t <= target, money, xp.inf)
+
+                self._sla_fn_cache[(impl, be.name)] = fn
+            return fn
 
         def cheapest_under_sla(impl: str, ss: float, ls: float):
             model = self.models[impl]
+            params = np.asarray([ss, ls, target_time])
             if hasattr(model, "cost_grid"):
-                def batch(cfgs):
-                    t = model.cost_grid(ss, ls, cfgs)
-                    nc = cfgs[:, 0].astype(np.float64)
-                    cs = cfgs[:, 1].astype(np.float64)
-                    money = monetary_cost(t, cs, nc)
-                    return np.where(t <= target_time, money, np.inf)
-                res, m = argmin_grid(batch, self.cluster)
-                return None if res is None else (res, m)
+                res, m = backend.argmin_grid(_sla_fn(impl, backend),
+                                             self.cluster, params=params)
+                if res is not None and backend.name != "numpy":
+                    # re-evaluate the winner in float64; if float32 jax
+                    # rounding let an SLA-violating config win, redo the
+                    # scan on the exact (still vectorized) numpy backend
+                    nc, cs = res
+                    t = model.cost(ss, cs, nc, ls=ls)
+                    if not (math.isfinite(t) and t <= target_time):
+                        np_be = get_backend("numpy")
+                        res, m = np_be.argmin_grid(_sla_fn(impl, np_be),
+                                                   self.cluster,
+                                                   params=params)
+                if res is None:
+                    return None
+                nc, cs = res
+                t = model.cost(ss, cs, nc, ls=ls)
+                if math.isfinite(t) and t <= target_time:
+                    m = monetary_cost(t, cs, nc)
+                return res, m
             best = None
             for res in self.cluster.all_configs():
                 nc, cs = res

@@ -13,6 +13,20 @@ Formulas are an explicit op census (documented approximations, not magic
 constants); the dry-run's loop-corrected HLO stats cross-validate them for
 the hill-climbed cells (EXPERIMENTS.md §Roofline).
 
+Two evaluation paths, mirroring the DB-domain cost models (paper §VI-A,
+Fig. 8's shared cost model f(d, r) -> C):
+
+* ``terms_for(cfg, shape, r)``         — one Resources tuple, scalar floats.
+* ``terms_grid(cfg, shape, resources)`` — an ``(N, 4)`` integer array of
+  ``(pods, dp, tp, microbatch)`` configurations evaluated in a single
+  vectorized call, returning per-term arrays (``RooflineGrid``).  With
+  ``xp=numpy`` the arithmetic is float64 and matches ``terms_for``
+  bit-for-bit (shared expression order); with ``xp=jax.numpy`` the whole
+  surface is traceable and fuses into the jitted search programs of
+  ``repro.core.planning_backend`` — which is what lets Algorithm 1 run
+  *inside* the sharding planner's plan-choice loop at array speed
+  (the paper's §VII overhead-reduction result, transplanted to TPUs).
+
 Hardware constants: TPU v5e-like target per the task sheet.
 """
 from __future__ import annotations
@@ -20,6 +34,8 @@ from __future__ import annotations
 import dataclasses
 import math
 from typing import Dict, Optional, Tuple
+
+import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
@@ -307,3 +323,229 @@ def terms_for(cfg: ModelConfig, shape: ShapeConfig, r: Resources,
 def chip_seconds(t: RooflineTerms, r: Resources) -> float:
     """The TPU 'monetary cost' (paper §III-C: container-hours)."""
     return t.step_s * r.chips
+
+
+# ------------------------- vectorized (grid) path --------------------------- #
+
+@dataclasses.dataclass
+class RooflineGrid:
+    """Per-term arrays over an (N, 4) batch of resource configurations.
+    Field-for-field the array twin of RooflineTerms (minus notes)."""
+    compute_s: "np.ndarray"
+    memory_s: "np.ndarray"
+    collective_s: "np.ndarray"
+    flops_per_chip: "np.ndarray"
+    traffic_per_chip: "np.ndarray"
+    wire_per_chip: "np.ndarray"
+    hbm_per_chip: "np.ndarray"
+    feasible: "np.ndarray"
+    chips: "np.ndarray"
+    model_flops: float
+
+    @property
+    def step_s(self):
+        # same no-overlap sum as RooflineTerms.step_s
+        return self.compute_s + self.memory_s + self.collective_s
+
+
+def _res_cols(resources, xp):
+    """(N, 4) array of (pods, dp, tp, microbatch) -> integer columns."""
+    a = xp.asarray(resources)
+    if a.ndim != 2 or a.shape[1] != 4:
+        raise ValueError(f"expected (N, 4) resource configs, got {a.shape}")
+    return a[:, 0], a[:, 1], a[:, 2], a[:, 3]
+
+
+def train_terms_grid(cfg: ModelConfig, shape: ShapeConfig, resources, *,
+                     schedule: str = "dense", remat: bool = True,
+                     fsdp: bool = True, seq_shard: bool = True,
+                     hw: Dict[str, float] = HW, xp=np) -> RooflineGrid:
+    """Batched ``train_terms``: identical expression order per element, so
+    the numpy path is bit-identical with the scalar loop and the jax path
+    agrees within float32 tolerance."""
+    pods, dp, tp, mb = _res_cols(resources, xp)
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    N = float(cfg.param_count())        # exact below 2^53; jax-int32-safe
+    Na = float(cfg.active_param_count())
+    chips = pods * dp * tp
+    dp_total = pods * dp
+
+    # ---------------- FLOPs (resource-independent for training) ------------
+    matmul = (8.0 if remat else 6.0) * Na * tokens
+    f_attn = 0.0
+    if cfg.has_attention:
+        kv_eff = _attn_seq_factor(cfg, S, schedule)
+        n_attn = cfg.n_layers if cfg.family != "hybrid" \
+            else cfg.n_layers // max(1, cfg.hybrid_period)
+        per_layer = 4.0 * tokens * kv_eff * cfg.n_heads * cfg.head_dim
+        f_attn = per_layer * n_attn * ((1 + 1 + 2) if remat else (1 + 2))
+    f_ssm = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        f_ssm = 6.0 * tokens * cfg.d_inner * cfg.ssm_state * cfg.n_layers * \
+            (4 if remat else 3)
+    flops = matmul + f_attn + f_ssm
+    model_flops = 6.0 * Na * tokens
+
+    # ---------------- HBM traffic per chip ----------------
+    fsdp_deg = dp if fsdp else 1
+    param_shard = N / (tp * fsdp_deg)
+    weight_read = 3.0 * (N / tp) * 2
+    opt_rw = 5.0 * param_shard * 4
+    grad_rw = 2.0 * param_shard * 4
+    tok_local = tokens / dp_total
+    act_d = cfg.d_model * 2
+    sp = tp if seq_shard else 1
+    act_rw = 12.0 * cfg.n_layers * (tok_local / sp) * act_d \
+        + 6.0 * cfg.n_layers * tok_local * act_d / tp
+    traffic = weight_read + opt_rw + grad_rw + act_rw
+    traffic = traffic + (mb - 1) * weight_read * 0.5
+
+    # ---------------- collective wire bytes per chip ----------------
+    # each guarded term of the scalar path carries a (x - 1) / x factor
+    # that is exactly 0.0 on its guard boundary, so unconditional adds
+    # reproduce the scalar branches bit-for-bit
+    wire = 0.0
+    n_layers = cfg.n_layers
+    blocks = 2 if cfg.family not in ("ssm",) else 1
+    wire = wire + 2 * 2 * blocks * n_layers * (tok_local * act_d) * \
+        (tp - 1) / tp
+    if fsdp:
+        wire = wire + 3 * (N * 2 / tp) * (fsdp_deg - 1) / fsdp_deg * mb
+    red = dp_total if not fsdp else pods
+    if fsdp:
+        wire = wire + (N * 2 / tp) * (dp - 1) / dp
+    wire = wire + 2 * (N * 2 / (tp * (fsdp_deg if fsdp else 1))) * \
+        (red - 1) / red
+    if cfg.is_moe:
+        wire = wire + 6.0 * (tokens / chips) * cfg.top_k * act_d
+
+    # ---------------- HBM footprint per chip ----------------
+    act_saved = cfg.n_layers * (tok_local / (sp * mb)) * act_d
+    if not remat:
+        act_saved = act_saved * 8
+    hbm = param_shard * 16 + act_saved + (N / tp) * 2
+    feasible = hbm < hw["hbm_bytes"] * 0.92
+
+    return RooflineGrid(
+        compute_s=flops / (chips * hw["peak_flops"]),
+        memory_s=traffic / hw["hbm_bw"],
+        collective_s=wire / hw["link_bw"],
+        flops_per_chip=flops / chips,
+        traffic_per_chip=traffic,
+        wire_per_chip=wire,
+        hbm_per_chip=hbm,
+        feasible=feasible,
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+
+def decode_terms_grid(cfg: ModelConfig, shape: ShapeConfig, resources, *,
+                      weight_mode: str = "stationary",
+                      hw: Dict[str, float] = HW, xp=np) -> RooflineGrid:
+    pods, dp, tp, _mb = _res_cols(resources, xp)
+    B, S = shape.global_batch, shape.seq_len
+    Na = float(cfg.active_param_count())
+    N = float(cfg.param_count())
+    chips = pods * dp * tp
+
+    flops = 2.0 * Na * B
+    # float() static int censuses before they meet traced columns: they
+    # can exceed int32 (jax) while staying exact in float64 (< 2^53)
+    cache = float(_cache_bytes(cfg, B, S))
+    if cfg.has_attention:
+        flops += 4.0 * B * _attn_seq_factor(cfg, min(S, 10**9), "dense") * \
+            cfg.n_heads * cfg.head_dim * \
+            (cfg.n_layers if cfg.family != "hybrid"
+             else cfg.n_layers // max(1, cfg.hybrid_period))
+    model_flops = 2.0 * Na * B
+
+    traffic = (N * 2 / chips if weight_mode == "gathered" else N * 2 / tp) \
+        + cache / chips
+    wire = 0.0
+    wire = wire + float(2 * cfg.n_layers * B * cfg.d_model * 2) * \
+        (tp - 1) / tp / xp.maximum(1, pods * dp)
+    if weight_mode == "gathered":
+        wire = wire + (N * 2 / tp) * (dp - 1) / xp.maximum(1, dp)
+    if cfg.is_moe:
+        wire = wire + 6.0 * (B / chips) * cfg.top_k * cfg.d_model * 2
+
+    hbm = (N * 2 / chips if weight_mode == "gathered" else N * 2 / tp) \
+        + cache / chips
+    feasible = hbm < hw["hbm_bytes"] * 0.92
+
+    return RooflineGrid(
+        compute_s=flops / (chips * hw["peak_flops"]),
+        memory_s=traffic / hw["hbm_bw"],
+        collective_s=wire / hw["link_bw"],
+        flops_per_chip=flops / chips,
+        traffic_per_chip=traffic,
+        wire_per_chip=wire,
+        hbm_per_chip=hbm,
+        feasible=feasible,
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+
+def prefill_terms_grid(cfg: ModelConfig, shape: ShapeConfig, resources, *,
+                       schedule: str = "dense",
+                       hw: Dict[str, float] = HW, xp=np) -> RooflineGrid:
+    pods, dp, tp, _mb = _res_cols(resources, xp)
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    Na = float(cfg.active_param_count())
+    N = float(cfg.param_count())
+    chips = pods * dp * tp
+    dp_total = pods * dp
+
+    flops = 2.0 * Na * tokens
+    if cfg.has_attention:
+        kv_eff = _attn_seq_factor(cfg, S, schedule)
+        n_attn = cfg.n_layers if cfg.family != "hybrid" \
+            else cfg.n_layers // max(1, cfg.hybrid_period)
+        flops += 4.0 * tokens * kv_eff * cfg.n_heads * cfg.head_dim * \
+            n_attn / 2
+    if cfg.family in ("ssm", "hybrid"):
+        flops += 6.0 * tokens * cfg.d_inner * cfg.ssm_state * cfg.n_layers
+    model_flops = 2.0 * Na * tokens
+
+    tok_local = tokens / dp_total
+    # float() static int census (exceeds int32 on jax, exact in float64)
+    cache = float(_cache_bytes(cfg, B, S))
+    traffic = N * 2 / tp + 6.0 * cfg.n_layers * tok_local * cfg.d_model * 2 \
+        + cache / chips
+    wire = 0.0
+    wire = wire + 4 * cfg.n_layers * tok_local * cfg.d_model * 2 * \
+        (tp - 1) / tp
+    if cfg.is_moe:
+        wire = wire + 3.0 * (tokens / chips) * cfg.top_k * cfg.d_model * 2
+    hbm = N * 2 / tp + cache / chips \
+        + tok_local * cfg.d_model * 2 * 4
+    feasible = hbm < hw["hbm_bytes"] * 0.92
+    return RooflineGrid(
+        compute_s=flops / (chips * hw["peak_flops"]),
+        memory_s=traffic / hw["hbm_bw"],
+        collective_s=wire / hw["link_bw"],
+        flops_per_chip=flops / chips,
+        traffic_per_chip=traffic,
+        wire_per_chip=wire,
+        hbm_per_chip=hbm,
+        feasible=feasible,
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+
+def terms_grid(cfg: ModelConfig, shape: ShapeConfig, resources, *,
+               xp=np, **kw) -> RooflineGrid:
+    """Batched ``terms_for`` over an (N, 4) array of (pods, dp, tp,
+    microbatch) configurations.  ``xp`` selects numpy (float64,
+    bit-identical with the scalar path) or jax.numpy (traceable, fuses
+    into the jitted search of planning_backend)."""
+    if shape.kind == "train":
+        return train_terms_grid(cfg, shape, resources, xp=xp, **kw)
+    if shape.kind == "prefill":
+        return prefill_terms_grid(cfg, shape, resources, xp=xp, **kw)
+    return decode_terms_grid(cfg, shape, resources, xp=xp, **kw)

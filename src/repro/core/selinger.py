@@ -15,8 +15,21 @@ from repro.core.schema import Schema
 
 def selinger_plan(schema: Schema, tables: Sequence[str],
                   costing: OperatorCosting,
-                  impls: Sequence[str] = IMPLS) -> Optional[PlanNode]:
-    """Optimal left-deep plan under the (resource-aware) cost model."""
+                  impls: Sequence[str] = IMPLS,
+                  backend=None) -> Optional[PlanNode]:
+    """Optimal left-deep plan under the (resource-aware) cost model.
+
+    ``backend`` (optional) overrides the array-search backend used for
+    per-operator resource planning for this optimization run — the same
+    engine (repro.core.planning_backend) the TPU sharding planner uses.
+    """
+    if backend is not None:
+        saved = costing.backend
+        costing.backend = backend
+        try:
+            return selinger_plan(schema, tables, costing, impls)
+        finally:
+            costing.backend = saved
     costing.begin_query()        # fresh per-query resource-plan memo
     tables = tuple(tables)
     n = len(tables)

@@ -5,9 +5,18 @@ This is the paper's architecture (Fig 8b) transplanted: the "query" is an
 parallelism plan (attention schedule, weight mode, remat, FSDP — the
 analog of {BHJ, SMJ} operator implementations), the "resource plan" is
 (pods, dp, tp, microbatch), and the cost model is the three-term roofline.
-Resource planning reuses Algorithm 1 (repro.core.hillclimb.hill_climb) and
-the resource-plan cache verbatim — same code paths as the DB-domain
-reproduction.
+
+Resource planning runs on the shared array-planning engine
+(repro.core.planning_backend) — the *same* search code paths as the
+DB-domain reproduction: the whole resource grid is costed through the
+vectorized ``terms_grid`` roofline (one array program per plan choice; no
+per-config Python ``terms_for`` calls inside the search loop), either as
+an exhaustive chunked scan (§VI-B1) or as a multi-start ensemble climb
+(Algorithm 1, §VI-B2, batched over all starts).  With ``backend="jax"``
+the roofline fuses into one jitted XLA program per plan choice, and
+per-request scalars (chip budget, degraded-cluster cap) are traced
+arguments — so ``for_budget`` and adaptive ``replan`` reuse the compiled
+program instead of recompiling.
 
 Use-cases mirror §IV:
     r => p : best plan for a fixed chip budget       (plan_for_resources)
@@ -21,14 +30,16 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.cluster import ClusterConditions, PlanningStats, ResourceDim
-from repro.core.hillclimb import brute_force, hill_climb_multi
 from repro.core.plan_cache import ResourcePlanCache
+from repro.core.planning_backend import PlanBackend, get_backend
 from repro.core.roofline import (HW, Resources, RooflineTerms, chip_seconds,
-                                 terms_for)
+                                 terms_for, terms_grid)
 
 
 def _pows2(lo: int, hi: int) -> Tuple[int, ...]:
@@ -106,9 +117,18 @@ class ShardingDecision:
 @dataclasses.dataclass
 class ShardingPlanner:
     cluster: TpuCluster = dataclasses.field(default_factory=TpuCluster)
-    resource_planning: str = "hillclimb"       # hillclimb | brute
+    # hillclimb (2-corner vectorized climb) | ensemble (corners + random
+    # starts, all climbed as one batch) | brute (full-grid scan)
+    resource_planning: str = "hillclimb"
     cache: Optional[ResourcePlanCache] = None
     objective: str = "time"                    # time | chip_seconds
+    backend: Union[str, PlanBackend, None] = "numpy"   # numpy | jax | auto
+    ensemble_starts: int = 24                  # random starts for "ensemble"
+    seed: int = 0
+    # per-(cfg, shape, choice) batch-cost fns: reusing the same fn object
+    # lets the jax backend reuse its compiled search programs
+    _grid_fn_cache: Dict = dataclasses.field(default_factory=dict,
+                                             repr=False)
 
     def _objective(self, t: RooflineTerms, r: Resources) -> float:
         if not t.feasible:
@@ -117,8 +137,14 @@ class ShardingPlanner:
             return chip_seconds(t, r)
         return t.step_s
 
+    def _hw(self) -> Dict[str, float]:
+        return {**HW, "hbm_bytes": self.cluster.hbm_per_chip}
+
     def _cost_fn(self, cfg: ModelConfig, shape: ShapeConfig, choice: Dict,
                  budget: Optional[int]):
+        """Scalar cost of ONE configuration — used to validate cached hits
+        and to re-evaluate the search winner through float64, never inside
+        the (vectorized) search loop."""
         def fn(res_tuple: Tuple[int, ...]) -> float:
             r = Resources(*res_tuple)
             if budget is not None and r.chips > budget:
@@ -130,12 +156,46 @@ class ShardingPlanner:
             if shape.kind == "train" and \
                     shape.global_batch % (r.pods * r.dp * r.microbatch):
                 return math.inf
-            t = terms_for(cfg, shape, r,
-                          **{**choice, "hw": {**HW,
-                                              "hbm_bytes":
-                                              self.cluster.hbm_per_chip}})
+            t = terms_for(cfg, shape, r, **{**choice, "hw": self._hw()})
             return self._objective(t, r)
         return fn
+
+    def _grid_fn(self, cfg: ModelConfig, shape: ShapeConfig, choice: Dict,
+                 backend: PlanBackend):
+        """Batched cost surface fn(configs, params) over (N, 4) resource
+        arrays; params = [chip_budget, max_chips] so budget/degraded-
+        cluster variants share one (possibly jit-compiled) program."""
+        key = (backend.name, cfg, shape, tuple(sorted(choice.items())),
+               self.objective, self.cluster.hbm_per_chip)
+        fn = self._grid_fn_cache.get(key)
+        if fn is not None:
+            return fn
+        xp = backend.xp
+        hw = self._hw()
+        objective = self.objective
+        kind = shape.kind
+        global_batch = shape.global_batch
+
+        def fn(cfgs, params):
+            g = terms_grid(cfg, shape, cfgs, xp=xp, hw=hw, **choice)
+            cost = g.step_s if objective != "chip_seconds" \
+                else g.step_s * g.chips
+            bad = ~g.feasible
+            bad = bad | (g.chips > params[0]) | (g.chips > params[1])
+            if kind == "train":
+                a = xp.asarray(cfgs)
+                denom = a[:, 0] * a[:, 1] * a[:, 3]
+                bad = bad | ((global_batch % denom) != 0)
+            return xp.where(bad, xp.inf, cost)
+
+        self._grid_fn_cache[key] = fn
+        return fn
+
+    def _params(self, budget: Optional[int]) -> np.ndarray:
+        return np.asarray(
+            [budget if budget is not None else math.inf,
+             self.cluster.max_chips if self.cluster.max_chips is not None
+             else math.inf], dtype=np.float64)
 
     def _data_key(self, cfg: ModelConfig, shape: ShapeConfig) -> float:
         """Data characteristics for the plan cache: active-GB x tokens."""
@@ -146,10 +206,13 @@ class ShardingPlanner:
     def joint(self, cfg: ModelConfig, shape: ShapeConfig, arch: str = "",
               chip_budget: Optional[int] = None) -> ShardingDecision:
         """=> (p, r): enumerate plan choices (operator implementations),
-        hill-climb resources per choice — exactly the paper's §VI loop."""
+        search resources per choice on the array backend — the paper's
+        §VI loop with the inner search fully vectorized."""
         t0 = time.perf_counter()
         stats = PlanningStats()
         dims = self.cluster.dims(shape)
+        backend = get_backend(self.backend)
+        params = self._params(chip_budget)
         best = None
         for choice in PLAN_CHOICES[shape.kind]:
             # inapplicable choices (e.g. causal_skip for attention-free)
@@ -157,7 +220,8 @@ class ShardingPlanner:
                 continue
             key = self._data_key(cfg, shape)
             model_id = f"{shape.kind}:{sorted(choice.items())}"
-            fn = self._cost_fn(cfg, shape, choice, chip_budget)
+            scalar_fn = self._cost_fn(cfg, shape, choice, chip_budget)
+            grid_fn = self._grid_fn(cfg, shape, choice, backend)
             res = None
             if self.cache is not None:
                 hit = self.cache.lookup(model_id, cfg.family, key,
@@ -166,30 +230,50 @@ class ShardingPlanner:
                     # validate under *current* cluster conditions — a cached
                     # plan from a healthier cluster may be infeasible now
                     # (adaptive RAQO, paper §VIII)
-                    if math.isfinite(fn(hit)):
+                    if math.isfinite(scalar_fn(hit)):
                         res = hit
+            searched = res is None
             if res is None:
                 if self.resource_planning == "brute":
-                    res, cost = brute_force(fn, dims, stats)
+                    res, cost = backend.argmin_grid(grid_fn, dims, stats,
+                                                    params=params)
                 else:
-                    # multi-start (min + max corners): decode workloads are
-                    # often best at large tp, training at small
-                    res, cost = hill_climb_multi(fn, dims, stats=stats)
+                    n_random = self.ensemble_starts \
+                        if self.resource_planning == "ensemble" else 0
+                    res, cost = backend.hill_climb_ensemble(
+                        grid_fn, dims, stats=stats, params=params,
+                        n_random=n_random, seed=self.seed)
                     if not math.isfinite(cost):
-                        # both starts stranded on an infeasible plateau
-                        # (OOM below / budget above).  The TPU resource grid
-                        # is tiny (<= few hundred points) so exhaustive
-                        # search is cheap — the paper-scale grids where
-                        # hill climbing matters are the DB-domain ones.
-                        res, cost = brute_force(fn, dims, stats)
-                if self.cache is not None and math.isfinite(cost):
-                    self.cache.insert(model_id, cfg.family, key, res)
-            else:
-                cost = fn(res)
+                        # all starts stranded on an infeasible plateau
+                        # (OOM below / budget above): exhaustive scan —
+                        # still one array program over the (small) grid
+                        res, cost = backend.argmin_grid(grid_fn, dims,
+                                                        stats, params=params)
+            if res is None:
+                continue
+            # commit through the scalar float64 path (guards the float32
+            # jax backend; exact no-op for the numpy backend)
+            cost = scalar_fn(tuple(res))
+            if not math.isfinite(cost) and backend.name != "numpy":
+                # float32 rounding let an infeasible-in-float64 winner
+                # through: redo this choice on the exact numpy backend
+                np_backend = get_backend("numpy")
+                np_fn = self._grid_fn(cfg, shape, choice, np_backend)
+                res, _ = np_backend.argmin_grid(np_fn, dims, stats,
+                                                params=params)
+                if res is None:
+                    continue
+                cost = scalar_fn(tuple(res))
             if not math.isfinite(cost):
                 continue
+            # persist to the cross-query cache only after the float64
+            # commit accepted the plan (never cache float32-only winners)
+            if searched and self.cache is not None:
+                self.cache.insert(model_id, cfg.family, key, res)
             r = Resources(*res)
-            t = terms_for(cfg, shape, r, **choice)
+            # decision terms under the planner's own hardware view, like
+            # the search itself (matters for non-default hbm_per_chip)
+            t = terms_for(cfg, shape, r, **{**choice, "hw": self._hw()})
             if best is None or cost < best.objective_value:
                 best = ShardingDecision(
                     arch=arch or cfg.name, shape=shape.name, resources=r,
@@ -210,7 +294,8 @@ class ShardingPlanner:
         for choice in PLAN_CHOICES[shape.kind]:
             if cfg.family == "ssm" and choice.get("schedule") == "causal_skip":
                 continue
-            t = terms_for(cfg, shape, resources, **choice)
+            t = terms_for(cfg, shape, resources,
+                          **{**choice, "hw": self._hw()})
             val = self._objective(t, resources)
             if best is None or val < best.objective_value:
                 best = ShardingDecision(
@@ -222,12 +307,16 @@ class ShardingPlanner:
 
     def for_budget(self, cfg: ModelConfig, shape: ShapeConfig,
                    chip_budget: int) -> ShardingDecision:
-        """c => (p, r): best step time using at most ``chip_budget`` chips."""
+        """c => (p, r): best step time using at most ``chip_budget`` chips.
+        The budget travels in ``params``, so a jax backend reuses the
+        compiled joint-search program."""
         return self.joint(cfg, shape, chip_budget=chip_budget)
 
     def replan(self, cfg: ModelConfig, shape: ShapeConfig,
                lost_chips: int) -> ShardingDecision:
-        """Adaptive RAQO: cluster degraded (node failures) — re-optimize."""
+        """Adaptive RAQO: cluster degraded (node failures) — re-optimize.
+        Only ``max_chips`` changes (a traced parameter), so the degraded
+        planner shares the healthy planner's compiled search programs."""
         degraded = dataclasses.replace(
             self.cluster,
             max_chips=(self.cluster.max_pods * self.cluster.max_dp *

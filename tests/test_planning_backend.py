@@ -1,0 +1,326 @@
+"""Backend parity: numpy and jax PlanBackends (and scalar terms_for vs
+batched terms_grid) must agree — same argmin configs on random grids
+(OOM-masked and ragged-stepped included), bit-identical numpy roofline
+grids, and identical vectorized ShardingPlanner plans vs the scalar
+search path."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, get_shape
+from repro.core.cluster import ClusterConditions, ResourceDim, paper_cluster
+from repro.core.cost_model import simulator_cost_models
+from repro.core.hillclimb import brute_force, hill_climb_multi
+from repro.core.planning_backend import (enumerate_configs, get_backend,
+                                         start_indices)
+from repro.core.plans import OperatorCosting
+from repro.core.roofline import Resources, terms_for, terms_grid
+from repro.core.sharding_planner import (PLAN_CHOICES, ShardingPlanner,
+                                         TpuCluster)
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+ARCHS = ("deepseek-67b", "qwen3-moe-30b-a3b", "falcon-mamba-7b",
+         "zamba2-2.7b")
+SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+
+
+# ------------------- random grid helpers (ragged + OOM) -------------------- #
+
+def _random_cluster(rng, na: int, nb: int, ragged: bool):
+    """Two-dim cluster; optionally a ragged step dim ((hi-lo) % step != 0)
+    and an explicit-values dim, exercising both grid encodings."""
+    if ragged:
+        step = int(rng.integers(2, 4))
+        hi = 1 + step * (na - 1) + int(rng.integers(1, step))  # ragged top
+        da = ResourceDim("a", 1, hi, step=step)
+        vals = tuple(sorted(rng.choice(np.arange(1, 64), size=nb,
+                                       replace=False).tolist()))
+        db = ResourceDim("b", int(vals[0]), int(vals[-1]), values=vals)
+    else:
+        da = ResourceDim("a", 0, na - 1)
+        db = ResourceDim("b", 0, nb - 1)
+    return ClusterConditions(dims=(da, db))
+
+
+def _table_fn(cluster, table, xp):
+    """Batch cost fn looking up an (na, nb) table by config value; written
+    with xp ops so it is jax-traceable.  Integer-valued costs are exact in
+    float32, so numpy and jax argmins match exactly, ties included."""
+    ga, gb = (np.asarray(d.grid(), dtype=np.int64) for d in cluster.dims)
+    t = xp.asarray(table)
+    ga_x, gb_x = xp.asarray(ga), xp.asarray(gb)
+
+    def fn(cfgs, params=None):
+        a = xp.asarray(cfgs)
+        i = xp.searchsorted(ga_x, a[:, 0])
+        j = xp.searchsorted(gb_x, a[:, 1])
+        return t[i, j]
+    return fn
+
+
+def _random_table(rng, na, nb, oom_frac=0.15):
+    table = rng.integers(0, 1 << 20, size=(na, nb)).astype(np.float64)
+    table[rng.random((na, nb)) < oom_frac] = np.inf   # OOM-masked cells
+    return table
+
+
+# ------------------------- argmin-grid parity ------------------------------ #
+
+@needs_jax
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), na=st.integers(2, 12),
+       nb=st.integers(2, 9), ragged=st.booleans())
+def test_hypothesis_jax_numpy_argmin_identical(seed, na, nb, ragged):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    cluster = _random_cluster(rng, na, nb, ragged)
+    table = _random_table(rng, na, nb)
+    r_np, c_np = get_backend("numpy").argmin_grid(
+        _table_fn(cluster, table, np), cluster)
+    r_jx, c_jx = get_backend("jax").argmin_grid(
+        _table_fn(cluster, table, jnp), cluster)
+    assert r_jx == r_np
+    assert (c_jx == c_np) or (math.isinf(c_jx) and math.isinf(c_np))
+
+
+@needs_jax
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), na=st.integers(3, 12),
+       nb=st.integers(3, 9), ragged=st.booleans(),
+       n_random=st.integers(0, 8))
+def test_hypothesis_jax_numpy_ensemble_identical(seed, na, nb, ragged,
+                                                 n_random):
+    """Same seed -> same starts -> identical steepest-descent trajectories
+    on both backends (first-min tie-breaking on neighbors)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    cluster = _random_cluster(rng, na, nb, ragged)
+    table = _random_table(rng, na, nb)
+    r_np, c_np = get_backend("numpy").hill_climb_ensemble(
+        _table_fn(cluster, table, np), cluster, n_random=n_random, seed=seed)
+    r_jx, c_jx = get_backend("jax").hill_climb_ensemble(
+        _table_fn(cluster, table, jnp), cluster, n_random=n_random,
+        seed=seed)
+    assert r_jx == r_np
+    assert (c_jx == c_np) or (math.isinf(c_jx) and math.isinf(c_np))
+
+
+def test_ensemble_local_optimum_invariant_numpy():
+    rng = np.random.default_rng(11)
+    cluster = ClusterConditions(dims=(ResourceDim("a", 0, 20),
+                                      ResourceDim("b", 0, 10)))
+    table = rng.random((21, 11))
+    res, cost = get_backend("numpy").hill_climb_ensemble(
+        _table_fn(cluster, table, np), cluster, n_random=8, seed=3)
+    assert cost == table[res]
+    for d, delta in ((0, 1), (0, -1), (1, 1), (1, -1)):
+        n = list(res)
+        n[d] += delta
+        if 0 <= n[0] <= 20 and 0 <= n[1] <= 10:
+            assert table[tuple(n)] >= cost
+
+
+def test_ensemble_more_starts_never_worse():
+    """The vectorized multi-start ensemble must dominate the 2-corner
+    climb in solution quality (it contains those corners)."""
+    cluster = paper_cluster(30, 10)
+    rng = np.random.default_rng(5)
+    # multi-basin surface: three random attractors
+    pts = [(int(rng.integers(1, 31)), int(rng.integers(1, 11)),
+            float(rng.random() * 10)) for _ in range(3)]
+
+    def fn(cfgs, params=None):
+        a = np.asarray(cfgs, dtype=np.float64)
+        return np.min(np.stack(
+            [(a[:, 0] - x) ** 2 + (a[:, 1] - y) ** 2 + z
+             for x, y, z in pts]), axis=0)
+
+    be = get_backend("numpy")
+    _, c2 = be.hill_climb_ensemble(fn, cluster)               # corners only
+    _, c_ens = be.hill_climb_ensemble(fn, cluster, n_random=24, seed=0)
+    _, c_opt = be.argmin_grid(fn, cluster)
+    assert c_ens <= c2
+    assert c_ens == pytest.approx(c_opt)    # 24 starts find the optimum here
+
+
+def test_start_indices_dedupe_and_snap():
+    cluster = ClusterConditions(dims=(
+        ResourceDim("p2", 1, 16, values=(1, 2, 4, 8, 16)),
+        ResourceDim("lin", 1, 4)))
+    idx = start_indices(cluster, [(5, 3), (4, 3)], 0, 0)   # both snap to 4
+    assert len(idx) == 1
+    idx = start_indices(cluster, None, 6, seed=0)
+    assert len(idx) <= 8                       # corners + 6, deduped
+    assert tuple(idx[0]) == (0, 0) and tuple(idx[1]) == (4, 3)
+
+
+def test_params_are_threaded():
+    """params reach the cost fn on both entry points (budget masking)."""
+    cluster = paper_cluster(10, 4)
+
+    def fn(cfgs, params):
+        a = np.asarray(cfgs, dtype=np.float64)
+        cost = 1000.0 / a[:, 0] + a[:, 1]
+        return np.where(a[:, 0] > params[0], np.inf, cost)
+
+    be = get_backend("numpy")
+    r1, _ = be.argmin_grid(fn, cluster, params=np.asarray([10.0]))
+    r2, _ = be.argmin_grid(fn, cluster, params=np.asarray([4.0]))
+    assert r1[0] == 10 and r2[0] == 4
+    r3, _ = be.hill_climb_ensemble(fn, cluster,
+                                   params=np.asarray([4.0]))
+    assert r3[0] <= 4
+
+
+# ----------------- roofline: terms_grid == terms_for ----------------------- #
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", SHAPES)
+def test_terms_grid_bit_identical_to_scalar(arch, shape_name):
+    """The numpy grid roofline is bit-identical (not merely close) to the
+    scalar terms_for over the full TPU grid, for every plan choice."""
+    cfg, shape = get_config(arch), get_shape(shape_name)
+    dims = TpuCluster().dims(shape)
+    cfgs = enumerate_configs(dims)
+    for choice in PLAN_CHOICES[shape.kind]:
+        if cfg.family == "ssm" and choice.get("schedule") == "causal_skip":
+            continue
+        g = terms_grid(cfg, shape, cfgs, **choice)
+        for i, row in enumerate(cfgs):
+            t = terms_for(cfg, shape, Resources(*(int(v) for v in row)),
+                          **choice)
+            assert g.compute_s[i] == t.compute_s
+            assert g.memory_s[i] == t.memory_s
+            assert g.collective_s[i] == t.collective_s
+            assert g.hbm_per_chip[i] == t.hbm_per_chip
+            assert bool(g.feasible[i]) == t.feasible
+            assert g.step_s[i] == t.step_s
+
+
+@needs_jax
+def test_terms_grid_jax_within_fp_tolerance():
+    import jax.numpy as jnp
+    for arch, shape_name in (("deepseek-67b", "train_4k"),
+                             ("qwen3-moe-30b-a3b", "decode_32k"),
+                             ("zamba2-2.7b", "prefill_32k")):
+        cfg, shape = get_config(arch), get_shape(shape_name)
+        dims = TpuCluster().dims(shape)
+        cfgs = enumerate_configs(dims)
+        choice = PLAN_CHOICES[shape.kind][0]
+        g64 = terms_grid(cfg, shape, cfgs, **choice)
+        g32 = terms_grid(cfg, shape, jnp.asarray(cfgs), xp=jnp, **choice)
+        np.testing.assert_allclose(np.asarray(g32.step_s), g64.step_s,
+                                   rtol=5e-5)
+        np.testing.assert_allclose(np.asarray(g32.hbm_per_chip),
+                                   g64.hbm_per_chip, rtol=5e-5)
+
+
+# ------------- sharding planner: vectorized == scalar path ----------------- #
+
+def _scalar_joint(planner: ShardingPlanner, cfg, shape, chip_budget=None):
+    """The pre-backend scalar search path (hill_climb_multi over scalar
+    terms_for, brute-force fallback), kept as the reference oracle."""
+    dims = planner.cluster.dims(shape)
+    best = None
+    for choice in PLAN_CHOICES[shape.kind]:
+        if cfg.family == "ssm" and choice.get("schedule") == "causal_skip":
+            continue
+        fn = planner._cost_fn(cfg, shape, choice, chip_budget)
+        res, cost = hill_climb_multi(fn, dims)
+        if not math.isfinite(cost):
+            res, cost = brute_force(fn, dims)
+        if res is None or not math.isfinite(cost):
+            continue
+        if best is None or cost < best[0]:
+            best = (cost, tuple(res), choice)
+    return best
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", SHAPES)
+def test_vectorized_joint_matches_scalar_path(arch, shape_name):
+    cfg, shape = get_config(arch), get_shape(shape_name)
+    planner = ShardingPlanner()
+    d = planner.joint(cfg, shape)
+    ref = _scalar_joint(planner, cfg, shape)
+    assert ref is not None
+    cost, res, choice = ref
+    assert d.resources.as_tuple() == res
+    assert d.plan_choice == choice
+    assert d.objective_value == cost
+
+
+@needs_jax
+def test_jax_joint_matches_numpy_joint():
+    for arch, shape_name in (("deepseek-67b", "train_4k"),
+                             ("smollm-360m", "train_4k"),
+                             ("qwen3-moe-30b-a3b", "decode_32k")):
+        cfg, shape = get_config(arch), get_shape(shape_name)
+        dn = ShardingPlanner(backend="numpy").joint(cfg, shape)
+        dj = ShardingPlanner(backend="jax").joint(cfg, shape)
+        assert dj.resources == dn.resources
+        assert dj.plan_choice == dn.plan_choice
+        # both objective values commit through the scalar float64 path
+        assert dj.objective_value == dn.objective_value
+
+
+def test_ensemble_planner_never_worse_than_hillclimb():
+    cfg, shape = get_config("deepseek-67b"), get_shape("train_4k")
+    d_hc = ShardingPlanner(resource_planning="hillclimb").joint(cfg, shape)
+    d_en = ShardingPlanner(resource_planning="ensemble").joint(cfg, shape)
+    d_bf = ShardingPlanner(resource_planning="brute").joint(cfg, shape)
+    assert d_en.objective_value <= d_hc.objective_value + 1e-12
+    assert d_bf.objective_value <= d_en.objective_value + 1e-12
+
+
+# --------------- DB domain: jax == numpy through OperatorCosting ----------- #
+
+@needs_jax
+@pytest.mark.parametrize("objective", ["time", "money"])
+def test_operator_costing_jax_matches_numpy(objective):
+    cluster = paper_cluster(100, 10)
+    kw = dict(models=simulator_cost_models(), cluster=cluster,
+              objective=objective)
+    for ss, ls in ((0.5, 74.0), (2.0, 10.0), (6.0, 200.0)):
+        c_np = OperatorCosting(resource_planning="batched", **kw)
+        c_jx = OperatorCosting(resource_planning="batched", backend="jax",
+                               **kw)
+        r_np, cost_np = c_np.plan_resources("SMJ", ss, ls)
+        r_jx, cost_jx = c_jx.plan_resources("SMJ", ss, ls)
+        assert r_jx == r_np
+        # winner re-costed through the scalar float64 path on both ends
+        assert cost_jx == pytest.approx(cost_np, rel=1e-12)
+
+
+@needs_jax
+def test_operator_costing_jax_reuses_compiled_program():
+    """ss/ls travel as traced params: one (impl, objective) fn object ->
+    one backend program across operators with different data sizes."""
+    c = OperatorCosting(models=simulator_cost_models(),
+                        cluster=paper_cluster(50, 10),
+                        resource_planning="batched", backend="jax")
+    c.plan_resources("SMJ", 2.0, 74.0)
+    fn1 = c._grid_fn_cache.get(("SMJ", "time", "jax"))
+    c.begin_query()
+    c.plan_resources("SMJ", 5.0, 200.0)
+    assert c._grid_fn_cache.get(("SMJ", "time", "jax")) is fn1
+
+
+def test_operator_costing_ensemble_never_worse_than_2start():
+    cluster = paper_cluster(100, 10)
+    kw = dict(models=simulator_cost_models(), cluster=cluster)
+    for ss, ls in ((0.5, 74.0), (2.0, 74.0), (6.0, 200.0)):
+        c2 = OperatorCosting(resource_planning="hillclimb_batched", **kw)
+        ce = OperatorCosting(resource_planning="ensemble", **kw)
+        _, cost2 = c2.plan_resources("SMJ", ss, ls)
+        _, cost_e = ce.plan_resources("SMJ", ss, ls)
+        assert cost_e <= cost2 + 1e-12
