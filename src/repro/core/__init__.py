@@ -12,6 +12,8 @@ from repro.core.cost_model import (HiveSimulator, RegressionModel,  # noqa: F401
 from repro.core.hillclimb import (argmin_grid, brute_force,  # noqa: F401
                                   enumerate_configs, hill_climb,
                                   hill_climb_multi)
+from repro.core.plan_broker import (PlanBroker, PlanFuture,  # noqa: F401
+                                    PlanRequest)
 from repro.core.plan_cache import ResourcePlanCache  # noqa: F401
 from repro.core.planning_backend import (JaxPlanBackend,  # noqa: F401
                                          NumpyPlanBackend, PlanBackend,

@@ -83,14 +83,33 @@ def scaled_cluster(max_containers: int, max_gb: int) -> ClusterConditions:
 
 @dataclasses.dataclass
 class PlanningStats:
-    """Counters reported in the paper's evaluation."""
+    """Counters reported in the paper's evaluation, extended with the
+    resource-plan cache's per-(model, sub-plan-kind) detail and the
+    session broker's dedup/batching counters (so the broker's win — fewer
+    searches, larger array programs — is measurable, not anecdotal)."""
     configs_explored: int = 0
     cost_calls: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    cache_inserts: int = 0
+    # per-"model_id|subplan_kind" {"hits"/"misses"/"inserts": n}
+    cache_detail: dict = dataclasses.field(default_factory=dict)
+    # session planning broker (repro.core.plan_broker)
+    broker_requests: int = 0          # requests submitted
+    broker_dedup_hits: int = 0        # resolved without their own search
+    broker_batches: int = 0           # stacked array programs executed
 
     def merge(self, other: "PlanningStats") -> None:
         self.configs_explored += other.configs_explored
         self.cost_calls += other.cost_calls
         self.cache_hits += other.cache_hits
         self.cache_misses += other.cache_misses
+        self.cache_inserts += other.cache_inserts
+        self.broker_requests += other.broker_requests
+        self.broker_dedup_hits += other.broker_dedup_hits
+        self.broker_batches += other.broker_batches
+        for key, d in other.cache_detail.items():
+            mine = self.cache_detail.setdefault(
+                key, {"hits": 0, "misses": 0, "inserts": 0})
+            for k, v in d.items():
+                mine[k] = mine.get(k, 0) + v

@@ -62,14 +62,27 @@ def _split_configs(configs, xp=np) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def _oom_mask(oom_fn, ss, cs, xp=np):
-    """Vectorize an (ss, cs) -> bool OOM predicate over a cs column."""
+    """Vectorize an (ss, cs) -> bool OOM predicate over a cs column.  The
+    broker's stacked many-request path passes ``ss`` as a (Q, 1) column
+    broadcasting against the (N,) cs column, so the mask shape is the
+    broadcast of both (identical values to Q scalar-ss evaluations)."""
     if xp is not np:            # traced path: predicate must be elementwise
         return oom_fn(ss, cs)
+    shape = np.broadcast_shapes(np.shape(ss), np.shape(cs))
     try:
         m = oom_fn(ss, cs)
-        return np.broadcast_to(np.asarray(m, dtype=bool), np.shape(cs))
+        return np.broadcast_to(np.asarray(m, dtype=bool), shape)
     except (TypeError, ValueError):          # non-numpy-compatible predicate
-        return np.array([bool(oom_fn(ss, float(c))) for c in cs])
+        cs_col = np.ravel(cs)
+        if np.size(ss) == 1:                 # per-request scalar ss
+            s = float(np.reshape(np.asarray(ss), ()))
+            return np.broadcast_to(
+                np.array([bool(oom_fn(s, float(c))) for c in cs_col]),
+                shape)
+        # stacked (Q, 1) ss column: one predicate row per request
+        rows = [np.array([bool(oom_fn(float(s), float(c)))
+                          for c in cs_col]) for s in np.ravel(ss)]
+        return np.broadcast_to(np.stack(rows), shape)
 
 
 def _sort_log2(total, xp=np):

@@ -16,7 +16,7 @@ import random
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.plans import (IMPLS, OperatorCosting, PlanNode, has_edge,
-                              leaf)
+                              join_cardinality, leaf)
 from repro.core.schema import Schema
 
 CostVec = Tuple[float, float]     # (time s, money $)
@@ -98,16 +98,48 @@ def _rebuild(schema: Schema, node: PlanNode, costing: OperatorCosting,
     return costing.best_join(schema, l, r, impls)
 
 
-def mutate(schema: Schema, plan: PlanNode, costing: OperatorCosting,
-           rng: random.Random, impls: Sequence[str] = IMPLS
-           ) -> Optional[PlanNode]:
-    """One random mutation: commutativity, associativity, or exchange."""
+def _choose_mutation(plan: PlanNode, rng: random.Random
+                     ) -> Optional[Tuple[PlanNode, str]]:
+    """Draw the (node, kind) of one mutation — pure RNG, no costing, so
+    a whole population's choices can be made before any planning (the
+    draw order matches the historical ``mutate``, keeping seeded runs
+    reproducible)."""
     joins: List[PlanNode] = []
     _collect_joins(plan, joins)
     if not joins:
         return None
     node = rng.choice(joins)
     kind = rng.choice(("commute", "assoc", "exchange"))
+    return node, kind
+
+
+def _prefetch_mutation(schema: Schema, node: PlanNode, kind: str,
+                       costing: OperatorCosting,
+                       impls: Sequence[str]) -> None:
+    """Queue the candidate costings a mutation will need on the session
+    broker.  Join cardinalities are pure schema math, so both stages of
+    assoc/exchange are known before any planning resolves — the whole
+    population's mutations land in one broker flush."""
+    if kind == "commute":
+        costing.prefetch_join(schema, node.right, node.left, impls)
+    elif kind in ("assoc", "exchange") and not node.left.is_leaf:
+        a, b, c = node.left.left, node.left.right, node.right
+        first, second = ((b, c), a) if kind == "assoc" else ((a, c), b)
+        l, r = first
+        if not has_edge(schema, l, r):
+            return
+        costing.prefetch_join(schema, l, r, impls)
+        rows, rb = join_cardinality(schema, l, r)
+        mid = PlanNode(tables=l.tables | r.tables, rows=rows, row_bytes=rb)
+        if kind == "assoc" and has_edge(schema, second, mid):
+            costing.prefetch_join(schema, second, mid, impls)
+        elif kind == "exchange" and has_edge(schema, mid, second):
+            costing.prefetch_join(schema, mid, second, impls)
+
+
+def _apply_mutation(schema: Schema, plan: PlanNode,
+                    costing: OperatorCosting, node: PlanNode, kind: str,
+                    impls: Sequence[str]) -> Optional[PlanNode]:
     repl: Optional[PlanNode] = None
     if kind == "commute":
         repl = costing.best_join(schema, node.right, node.left, impls)
@@ -128,6 +160,17 @@ def mutate(schema: Schema, plan: PlanNode, costing: OperatorCosting,
     if repl is None:
         return None
     return _rebuild(schema, plan, costing, node, repl, impls)
+
+
+def mutate(schema: Schema, plan: PlanNode, costing: OperatorCosting,
+           rng: random.Random, impls: Sequence[str] = IMPLS
+           ) -> Optional[PlanNode]:
+    """One random mutation: commutativity, associativity, or exchange."""
+    choice = _choose_mutation(plan, rng)
+    if choice is None:
+        return None
+    return _apply_mutation(schema, plan, costing, choice[0], choice[1],
+                           impls)
 
 
 # ------------------------------ the planner -------------------------------- #
@@ -166,9 +209,19 @@ def fast_randomized_plan(schema: Schema, tables: Sequence[str],
     if not pop:
         return None, archive
     for _ in range(iterations):
+        # draw the whole population's mutations first (same RNG stream as
+        # mutating inline: each draw consumes exactly two choices) ...
+        chosen = [(p, _choose_mutation(p, rng)) for p in pop]
+        if costing.broker is not None:
+            # ... so every plan's candidate costings can be queued on the
+            # session broker and the first resolve flushes them together
+            for p, ch in chosen:
+                if ch is not None:
+                    _prefetch_mutation(schema, ch[0], ch[1], costing, impls)
         nxt: List[PlanNode] = []
-        for p in pop:
-            q = mutate(schema, p, costing, rng, impls)
+        for p, ch in chosen:
+            q = None if ch is None else \
+                _apply_mutation(schema, p, costing, ch[0], ch[1], impls)
             if q is not None:
                 archive.offer(q)
                 # hill-climb move on scalar objective, keep diversity via archive

@@ -1,0 +1,357 @@
+"""Session-scoped planning broker: one fused program call plans every
+operator of every concurrent query.
+
+The paper's architecture (Fig. 8) invokes resource planning once *per
+operator per query*; even with the jitted array backend (PR 2) that is
+one XLA program dispatch per request, and the §VII-C 100K-container story
+multiplies it by every operator of every query in flight.  This module
+breaks that per-request wall: callers (the DB-domain ``OperatorCosting``,
+the TPU-domain ``ShardingPlanner``, and the ``RAQO`` facade's multi-query
+entry point) *defer* their planning requests to a shared per-session
+broker, which resolves them in three stages mapping onto the paper's §VI
+machinery:
+
+1. **Dedup / cache fronting (§VI-B3).**  Requests are resolved against
+   the ``ResourcePlanCache`` first (same lookup modes, same stats), and
+   requests that share a cache key — or, for cache-less callers, the
+   exact (cost-fn, params, mode) signature — collapse onto one *leader*
+   search; followers reuse the leader's configuration and re-cost it
+   through their own scalar float64 path, exactly like a sequential
+   cache hit would.  Cache-less results additionally persist in a
+   bounded session memo, so recurring jobs across queries (the paper's
+   §V story) never re-search.
+
+2. **Stacked search (§VI-B1/2).**  Surviving leaders are grouped by
+   (cost-fn object, grid) and their per-request scalars stacked into a
+   padded ``(Q, P)`` params array; each group then runs as ONE array
+   program on the selected ``PlanBackend`` — ``argmin_grid_many`` (the
+   vectorized exhaustive scan of §VI-B1, all Q requests per chunk) or
+   ``hill_climb_ensemble_many`` (the batched Algorithm 1 of §VI-B2,
+   every start of every request climbing in one vmapped jitted
+   ``while_loop``).  On the numpy backend the stacked arithmetic is
+   bit-identical with Q independent per-operator searches (argmin ties
+   included); on jax the whole group is one fused program dispatch.
+
+3. **Commit / fan-out.**  Each winner is re-evaluated through the
+   caller's scalar float64 cost fn before being fanned back to the
+   caller's future.  A float32 jax winner that turns out infeasible in
+   float64 is redone exactly on the numpy backend (same fallback the
+   per-operator path used); on *exact* backends (numpy, ``jax_x64``)
+   that fallback is a parity assertion.  Ensemble requests stranded on
+   an all-infeasible plateau rerun as a grid scan (stacked again) when
+   ``scan_fallback`` is set.  Freshly searched feasible plans are
+   inserted into the cache, so the next flush dedups against them.
+
+Semantics note: within one flush, cache lookups observe the cache as of
+flush entry — two requests with the *same* cache key still share one
+search (leader/follower), but a nearest-neighbor/weighted-average cache
+does not interpolate against entries inserted in the same flush the way
+a strictly sequential loop would.  With an ``exact``-mode cache (or no
+cache) broker results are bit-identical to the sequential per-operator
+loop; the property tests in tests/test_plan_broker.py pin this.  If a
+leader's search comes back infeasible (nothing insertable), its
+followers are re-planned one by one through the sequential semantics, so
+that corner matches the per-operator loop too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterConditions, PlanningStats
+from repro.core.plan_cache import ResourcePlanCache
+from repro.core.planning_backend import (BatchCostFn, PlanBackend, Result,
+                                         get_backend)
+
+ScalarCostFn = Callable[[Tuple[int, ...]], float]
+
+
+@dataclasses.dataclass
+class PlanRequest:
+    """One deferred resource-planning request.
+
+    ``fn`` is the param-style batch cost surface (``fn(configs, params)``
+    -> costs, traceable for jax backends); ``params`` the per-request
+    scalars (e.g. ``[ss, ls]`` or ``[chip_budget, max_chips]``);
+    ``commit_fn`` the scalar float64 cost of one configuration (the
+    commit/validation path, never inside the search); ``fallback_fn`` a
+    numpy-namespace twin of ``fn`` used to redo the search exactly when a
+    non-exact backend's winner fails the float64 commit."""
+    fn: BatchCostFn
+    cluster: ClusterConditions
+    params: np.ndarray
+    commit_fn: ScalarCostFn
+    mode: str = "grid"                 # "grid" | "ensemble"
+    n_random: int = 0
+    seed: int = 0
+    scan_fallback: bool = False        # ensemble all-inf -> grid scan
+    fallback_fn: Optional[BatchCostFn] = None
+    cache: Optional[ResourcePlanCache] = None
+    cache_key: Optional[Tuple[str, str, float]] = None
+    validate_hit: bool = False         # reject infeasible cache hits
+    stats: Optional[PlanningStats] = None
+
+    def __post_init__(self):
+        self.params = np.asarray(self.params, dtype=np.float64)
+
+
+class PlanFuture:
+    """Handle to a deferred plan; ``result()`` flushes the broker if the
+    request is still pending and returns ``(resources, cost)``."""
+
+    __slots__ = ("_broker", "done", "value")
+
+    def __init__(self, broker: "PlanBroker"):
+        self._broker = broker
+        self.done = False
+        self.value: Result = (None, math.inf)
+
+    def result(self) -> Result:
+        if not self.done:
+            self._broker.flush()
+        if not self.done:
+            raise RuntimeError("broker flush did not resolve this request")
+        return self.value
+
+
+@dataclasses.dataclass
+class _Exec:
+    """A leader request plus the followers deduplicated onto it."""
+    req: PlanRequest
+    fut: PlanFuture
+    followers: List[Tuple[PlanRequest, PlanFuture]] = \
+        dataclasses.field(default_factory=list)
+    res: Optional[Tuple[int, ...]] = None
+    cost: float = math.inf
+
+
+class PlanBroker:
+    """Collects planning requests from every operator of every query in
+    flight and resolves them in batched flushes (see module docstring).
+
+    One broker per *session* (a RAQO instance, a multi-tenant batch of
+    queries, a sharding-planner fleet): the backend's compiled programs,
+    the session memo, and the dedup scope all live here.
+    """
+
+    MAX_MEMO = 4096                    # FIFO bound on the session memo
+
+    def __init__(self, backend=None):
+        self.backend: PlanBackend = get_backend(backend)
+        self._pending: List[Tuple[PlanRequest, PlanFuture]] = []
+        # exact-signature session memo for cache-less callers; callers
+        # with a ResourcePlanCache keep the cache as their single source
+        # of cross-flush reuse (so mutable-cache semantics stay per-op)
+        self._memo: Dict[Tuple, Tuple[BatchCostFn, Result]] = {}
+        self.stats = PlanningStats()   # broker-level aggregate
+
+    # ------------------------------------------------------------------ #
+    def _key(self, req: PlanRequest) -> Tuple:
+        return (id(req.fn), req.cluster.dims, req.params.tobytes(),
+                req.mode, req.n_random, req.seed)
+
+    def _bump(self, req: PlanRequest, field: str, n: int = 1) -> None:
+        setattr(self.stats, field, getattr(self.stats, field) + n)
+        if req.stats is not None:
+            setattr(req.stats, field, getattr(req.stats, field) + n)
+
+    def submit(self, req: PlanRequest) -> PlanFuture:
+        """Queue a request; returns a future resolved at the next flush
+        (or immediately, on a session-memo hit)."""
+        fut = PlanFuture(self)
+        self._bump(req, "broker_requests")
+        if req.cache is None:
+            hit = self._memo.get(self._key(req))
+            if hit is not None and hit[0] is req.fn:
+                self._bump(req, "broker_dedup_hits")
+                fut.value, fut.done = hit[1], True
+                return fut
+        self._pending.append((req, fut))
+        return fut
+
+    def pending_count(self) -> int:
+        return len(self._pending)
+
+    # ------------------------------------------------------------------ #
+    def flush(self) -> None:
+        """Resolve every pending request: dedup -> stacked search ->
+        float64 commit -> fan-out (stages 1-3 of the module docstring)."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return
+
+        # -- stage 1: cache fronting + within-flush dedup ---------------- #
+        leaders: Dict[Tuple, _Exec] = {}
+        for req, fut in pending:
+            if req.cache is None:
+                memo = self._memo.get(self._key(req))
+                if memo is not None and memo[0] is req.fn:
+                    self._bump(req, "broker_dedup_hits")
+                    self._resolve(fut, memo[1])
+                    continue
+            if req.cache is not None and req.cache_key is not None:
+                hit = req.cache.lookup(req.cache_key[0], req.cache_key[1],
+                                       req.cache_key[2], req.cluster,
+                                       req.stats)
+                if hit is not None:
+                    cfg = tuple(int(v) for v in hit)
+                    cost = req.commit_fn(cfg)
+                    if not req.validate_hit or math.isfinite(cost):
+                        self._resolve(fut, (cfg, cost))
+                        continue
+                    # cached plan invalid under current conditions
+                    # (degraded cluster, budget): fall through to search
+                dkey = (("cache", id(req.cache)) + req.cache_key +
+                        (req.mode, req.n_random, req.seed))
+            else:
+                dkey = ("exact",) + self._key(req)
+            led = leaders.get(dkey)
+            if led is None:
+                leaders[dkey] = _Exec(req=req, fut=fut)
+            else:
+                self._bump(req, "broker_dedup_hits")
+                led.followers.append((req, fut))
+
+        execs = list(leaders.values())
+        if not execs:
+            return
+
+        # -- stage 2: grouped stacked search ----------------------------- #
+        self._run(execs)
+        retry = [ex for ex in execs
+                 if ex.req.scan_fallback and ex.req.mode == "ensemble"
+                 and not math.isfinite(ex.cost)]
+        if retry:
+            # all starts stranded on an infeasible plateau: exhaustive
+            # scan, still stacked per (fn, grid) group
+            self._run(retry, force_mode="grid")
+
+        # -- stage 3: float64 commit + fan-out --------------------------- #
+        for ex in execs:
+            req = ex.req
+            res, cost = self._commit(req, ex.res, ex.cost)
+            ok = res is not None and math.isfinite(cost)
+            if req.cache is None:
+                while len(self._memo) >= self.MAX_MEMO:
+                    self._memo.pop(next(iter(self._memo)))
+                self._memo[self._key(req)] = (req.fn, (res, cost))
+            self._resolve(ex.fut, (res, cost))
+            if not ex.followers:
+                continue
+            if ok or req.cache is None:
+                # follower = sequential cache hit: leader's configuration,
+                # its own scalar float64 cost (exact-dedup followers are
+                # bit-identical requests, so this recomputes the same
+                # number the leader committed)
+                for freq, ffut in ex.followers:
+                    self._resolve(ffut,
+                                  (res, freq.commit_fn(res)) if ok
+                                  else (res, cost))
+            else:
+                # leader infeasible -> nothing was inserted; a sequential
+                # loop would have searched each follower itself (possibly
+                # feasibly — params differ within a cache key), inserting
+                # as it goes.  Rare corner: replay it sequentially.
+                for freq, ffut in ex.followers:
+                    self._resolve(ffut, self._solve_one(freq))
+
+    # ------------------------------------------------------------------ #
+    def _run(self, execs: List[_Exec], force_mode: Optional[str] = None
+             ) -> None:
+        """Execute leaders grouped per (cost-fn, grid, mode) as stacked
+        array programs, writing raw (res, cost) back onto each _Exec."""
+        groups: Dict[Tuple, List[_Exec]] = {}
+        for ex in execs:
+            req = ex.req
+            mode = force_mode or req.mode
+            gkey = (id(req.fn), req.cluster.dims, mode, req.n_random,
+                    req.seed, len(req.params))
+            groups.setdefault(gkey, []).append(ex)
+        for gkey, entries in groups.items():
+            req0 = entries[0].req
+            mode = force_mode or req0.mode
+            pm = np.stack([ex.req.params for ex in entries])
+            gstats = PlanningStats()
+            if mode == "grid":
+                results = self.backend.argmin_grid_many(
+                    req0.fn, req0.cluster, pm, stats=gstats)
+            else:
+                results = self.backend.hill_climb_ensemble_many(
+                    req0.fn, req0.cluster, pm, stats=gstats,
+                    n_random=req0.n_random, seed=req0.seed)
+            for ex in entries:
+                self._bump(ex.req, "broker_batches")
+            self.stats.broker_batches -= len(entries) - 1  # one per group
+            # attribute the group's exploration evenly (grid groups are
+            # exactly grid_size per request; climb convergence varies per
+            # request, so the split is approximate there)
+            share, rem = divmod(gstats.configs_explored, len(entries))
+            for i, (ex, rc) in enumerate(zip(entries, results)):
+                ex.res, ex.cost = rc
+                if ex.req.stats is not None:
+                    n = share + (rem if i == 0 else 0)
+                    ex.req.stats.configs_explored += n
+                    ex.req.stats.cost_calls += n
+
+    def _commit(self, req: PlanRequest, res, cost: float) -> Result:
+        """Float64 commit of one raw search result: re-cost through the
+        caller's scalar fn; on a feasibility disagreement, exact backends
+        assert parity and non-exact ones redo the search on the float64
+        numpy backend; feasible plans are inserted into the cache."""
+        if res is not None:
+            raw, cost = cost, req.commit_fn(res)
+            if not math.isfinite(cost):
+                if getattr(self.backend, "exact", False):
+                    # exact backend: search and commit compute in the
+                    # same float64 arithmetic — feasibility must agree
+                    assert not math.isfinite(raw), (
+                        f"exact backend {self.backend.name} selected "
+                        f"{res} with finite search cost {raw} but "
+                        f"infinite float64 commit")
+                elif req.fallback_fn is not None:
+                    res, cost = get_backend("numpy").argmin_grid(
+                        req.fallback_fn, req.cluster, req.stats,
+                        params=req.params)
+                    if res is not None:
+                        cost = req.commit_fn(res)
+        if res is not None and math.isfinite(cost) and \
+                req.cache is not None and req.cache_key is not None:
+            req.cache.insert(req.cache_key[0], req.cache_key[1],
+                             req.cache_key[2], res, stats=req.stats)
+        return res, cost
+
+    def _solve_one(self, req: PlanRequest) -> Result:
+        """Strictly sequential per-operator semantics for one request:
+        lookup -> search -> commit -> insert (the promotion path for
+        followers of an infeasible leader)."""
+        if req.cache is not None and req.cache_key is not None:
+            hit = req.cache.lookup(req.cache_key[0], req.cache_key[1],
+                                   req.cache_key[2], req.cluster, req.stats)
+            if hit is not None:
+                cfg = tuple(int(v) for v in hit)
+                cost = req.commit_fn(cfg)
+                if not req.validate_hit or math.isfinite(cost):
+                    return cfg, cost
+        stats = req.stats if req.stats is not None else PlanningStats()
+        before = stats.configs_explored
+        if req.mode == "grid":
+            res, cost = self.backend.argmin_grid(
+                req.fn, req.cluster, stats, params=req.params)
+        else:
+            res, cost = self.backend.hill_climb_ensemble(
+                req.fn, req.cluster, stats=stats, params=req.params,
+                n_random=req.n_random, seed=req.seed)
+            if not math.isfinite(cost) and req.scan_fallback:
+                res, cost = self.backend.argmin_grid(
+                    req.fn, req.cluster, stats, params=req.params)
+        stats.cost_calls += stats.configs_explored - before
+        return self._commit(req, res, cost)
+
+    @staticmethod
+    def _resolve(fut: PlanFuture, value: Result) -> None:
+        fut.value = (None if value[0] is None
+                     else tuple(int(v) for v in value[0]), float(value[1]))
+        fut.done = True

@@ -33,6 +33,25 @@ class ResourcePlanCache:
         self.mode = mode
         self.threshold = threshold
         self._store: Dict[Tuple[str, str], _Entry] = {}
+        # per-(model_id, subplan_kind) hit/miss/insert counters: the
+        # dedup win of the cache (and of the broker fronting it) is
+        # measurable per cost model and sub-plan kind, not just globally
+        self.counters: Dict[Tuple[str, str], Dict[str, int]] = {}
+
+    def _count(self, model_id: str, subplan_kind: str, field: str,
+               stats: Optional[PlanningStats]) -> None:
+        c = self.counters.setdefault((model_id, subplan_kind),
+                                     {"hits": 0, "misses": 0, "inserts": 0})
+        c[field] += 1
+        if stats is not None:
+            d = stats.cache_detail.setdefault(
+                f"{model_id}|{subplan_kind}",
+                {"hits": 0, "misses": 0, "inserts": 0})
+            d[field] += 1
+
+    def counters_snapshot(self) -> Dict[str, Dict[str, int]]:
+        """JSON-friendly copy of the per-(model, kind) counters."""
+        return {f"{m}|{k}": dict(v) for (m, k), v in self.counters.items()}
 
     # ------------------------------------------------------------------ #
     def lookup(self, model_id: str, subplan_kind: str, data_key: float,
@@ -69,15 +88,22 @@ class ResourcePlanCache:
                     if cluster is not None:
                         cfg = snap_to_grid(cfg, cluster)
                     hit = cfg
-        if stats is not None:
-            if hit is not None:
+        if hit is not None:
+            if stats is not None:
                 stats.cache_hits += 1
-            else:
+            self._count(model_id, subplan_kind, "hits", stats)
+        else:
+            if stats is not None:
                 stats.cache_misses += 1
+            self._count(model_id, subplan_kind, "misses", stats)
         return hit
 
     def insert(self, model_id: str, subplan_kind: str, data_key: float,
-               config: Sequence[int]) -> None:
+               config: Sequence[int],
+               stats: Optional[PlanningStats] = None) -> None:
+        if stats is not None:
+            stats.cache_inserts += 1
+        self._count(model_id, subplan_kind, "inserts", stats)
         e = self._store.setdefault((model_id, subplan_kind),
                                    _Entry(keys=[], configs=[]))
         i = bisect.bisect_left(e.keys, data_key)

@@ -44,9 +44,35 @@ is a small float vector of per-request scalars.  Infeasible
 configurations must cost ``inf``.  For the jax backend the fn must be
 traceable (build it from ``backend.xp`` ops; every cost model in this
 repo takes an ``xp`` argument for exactly this).
+
+Many-request primitives
+-----------------------
+``argmin_grid_many`` and ``hill_climb_ensemble_many`` evaluate a whole
+*batch* of planning requests that share one cost fn and one grid but
+differ in ``params``: the request scalars are stacked into a ``(Q, P)``
+array and the search runs for all Q requests at once.  On numpy the
+params enter the cost expression as ``(Q, 1)`` columns broadcasting
+against the ``(M,)`` config columns — the same float64 elementwise
+arithmetic as the per-request path, so the stacked argmins are
+bit-identical with Q independent scans.  On jax the per-request cost /
+climb is ``jax.vmap``-ed over the params axis and jitted as ONE program
+(config enumeration hoisted out of the vmap, request count padded to
+even so the compiled shape set stays small).
+This is the engine under ``repro.core.plan_broker``: one fused program
+call plans every operator of every concurrent query.
+
+Precision
+---------
+``JaxPlanBackend(precision="x64")`` (``get_backend("jax_x64")``) scopes
+every trace and call in ``jax.experimental.enable_x64``, so the compiled
+programs compute in float64 and argmin selection is exact — float32
+rounding can no longer flip a winner, and the planners' float64
+re-commit fallback shrinks to a parity assertion.  Backends advertise
+this via ``backend.exact`` (True for numpy and jax_x64).
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
@@ -124,6 +150,19 @@ def _snap_to_indices(cfg: Sequence[int], cluster: ClusterConditions,
     return [int(np.argmin(np.abs(g - v))) for g, v in zip(grids, snapped)]
 
 
+def _decode_flat(grids: List[np.ndarray], shape: Tuple[int, ...],
+                 flat: int) -> Tuple[int, ...]:
+    idx = np.unravel_index(int(flat), shape)
+    return tuple(int(g[i]) for g, i in zip(grids, idx))
+
+
+def _pad_even(n: int) -> int:
+    """Next even number >= n: the padded request count for stacked jax
+    programs — halves the distinct compiled batch shapes at <= one padded
+    lane of waste (pow2 padding wastes up to ~2x work on odd sizes)."""
+    return n + (n & 1)
+
+
 def _neighbor_offsets(n_dims: int) -> np.ndarray:
     """(2*n_dims, n_dims) index offsets: one -1 and one +1 step per dim,
     exactly the candidate set initialised on line 2 of Algorithm 1."""
@@ -141,6 +180,8 @@ class NumpyPlanBackend:
 
     name = "numpy"
     xp = np
+    exact = True                  # float64 end-to-end: argmins are exact
+    precision = "float64"
 
     def _call(self, fn: BatchCostFn, cfgs: np.ndarray, params) -> np.ndarray:
         out = fn(cfgs) if params is None else fn(cfgs, params)
@@ -223,6 +264,64 @@ class NumpyPlanBackend:
         res = tuple(int(v) for v in values_of(cur[i:i + 1])[0])
         return res, float(cur_cost[i])
 
+    # -- stacked many-request search ----------------------------------------- #
+    def argmin_grid_many(self, batch_cost_fn: BatchCostFn,
+                         cluster: ClusterConditions,
+                         params_many, *,
+                         stats: Optional[PlanningStats] = None,
+                         chunk_size: int = DEFAULT_CHUNK) -> List[Result]:
+        """Exhaustive scan for Q requests sharing one cost fn and grid.
+
+        ``params_many`` is ``(Q, P)``; the fn sees ``params`` whose k-th
+        entry is the ``(Q, 1)`` column of per-request scalars, which
+        broadcasts against the ``(M,)`` config columns into a ``(Q, M)``
+        cost matrix — identical float64 elementwise arithmetic to Q
+        separate scans, so plans and costs are bit-identical with the
+        per-request ``argmin_grid`` (first-strict-minimum ties included;
+        the argmin is invariant to the smaller per-request chunk)."""
+        stats = stats if stats is not None else PlanningStats()
+        pm = np.asarray(params_many, dtype=np.float64)
+        Q = pm.shape[0]
+        if Q == 0:
+            return []
+        total = cluster.grid_size()
+        p = pm.T[:, :, None]                      # params[k] -> (Q, 1)
+        chunk = max(1, chunk_size // Q)           # bounded memory: Q*chunk
+        best_cost = np.full(Q, np.inf)
+        best_flat = np.full(Q, -1, dtype=np.int64)
+        for lo in range(0, total, chunk):
+            cfgs = enumerate_configs(cluster, lo, lo + chunk)
+            out = np.asarray(batch_cost_fn(cfgs, p), dtype=np.float64)
+            costs = np.broadcast_to(out, (Q, len(cfgs)))
+            stats.configs_explored += Q * len(cfgs)
+            j = np.argmin(costs, axis=1)
+            c = costs[np.arange(Q), j]
+            upd = c < best_cost
+            best_cost[upd] = c[upd]
+            best_flat[upd] = lo + j[upd]
+        grids = grid_arrays(cluster)
+        shape = tuple(len(g) for g in grids)
+        return [(None, math.inf) if best_flat[q] < 0 else
+                (_decode_flat(grids, shape, best_flat[q]),
+                 float(best_cost[q])) for q in range(Q)]
+
+    def hill_climb_ensemble_many(self, batch_cost_fn: BatchCostFn,
+                                 cluster: ClusterConditions,
+                                 params_many, *,
+                                 starts=None,
+                                 stats: Optional[PlanningStats] = None,
+                                 n_random: int = 0, seed: int = 0,
+                                 max_iters: int = 100_000) -> List[Result]:
+        """Ensemble climbs for Q requests sharing one fn/grid/start set.
+        Runs the (already batched-over-starts) per-request climb once per
+        request — trivially bit-identical with the per-request path; the
+        jax backend fuses the whole Q-batch instead."""
+        pm = np.asarray(params_many, dtype=np.float64)
+        return [self.hill_climb_ensemble(
+            batch_cost_fn, cluster, starts, stats, params=pm[q],
+            n_random=n_random, seed=seed, max_iters=max_iters)
+            for q in range(pm.shape[0])]
+
 
 # ------------------------------- jax backend ------------------------------- #
 
@@ -232,22 +331,35 @@ class JaxPlanBackend:
     Compiled programs are memoized per (batch-cost-fn object, grid
     signature): reuse the same fn object across requests (vary the data
     via ``params``) and only the first request traces/compiles.  Numeric
-    note: without x64, jax computes in float32 — argmins agree with the
+    note: with the default ``precision="float32"`` argmins agree with the
     float64 backends up to fp tolerance, which is why the planners
     re-evaluate the winning configuration through the scalar float64 path
-    before committing to it.
+    before committing to it; ``precision="x64"`` scopes every trace and
+    call in ``jax.experimental.enable_x64`` so selection is exact
+    (``self.exact``) and that fallback shrinks to a parity assertion.
     """
-
-    name = "jax"
 
     MAX_PROGRAMS = 128                     # FIFO bound on compiled programs
 
-    def __init__(self):
+    def __init__(self, precision: str = "float32"):
         import jax                         # noqa: F401 — fail fast if absent
         import jax.numpy as jnp
+        if precision not in ("float32", "x64"):
+            raise ValueError(f"unknown jax precision {precision!r} "
+                             "(expected 'float32' or 'x64')")
         self._jax = jax
         self.xp = jnp
+        self.precision = precision
+        self.exact = precision == "x64"
+        self.name = "jax" if precision == "float32" else "jax_x64"
         self._programs = {}                # key -> (fn_ref, compiled)
+
+    def _scope(self):
+        """x64-scoped tracing/execution for precision="x64"; no-op else."""
+        if self.exact:
+            from jax.experimental import enable_x64
+            return enable_x64()
+        return contextlib.nullcontext()
 
     # -- program cache ------------------------------------------------------ #
     def _program(self, kind: str, fn: BatchCostFn,
@@ -271,8 +383,8 @@ class JaxPlanBackend:
         return fn(cfgs) if params is None else fn(cfgs, params)
 
     def _params(self, params):
-        return self.xp.asarray([] if params is None else params,
-                               dtype=self.xp.float32)
+        dtype = self.xp.float64 if self.exact else self.xp.float32
+        return self.xp.asarray([] if params is None else params, dtype=dtype)
 
     # -- chunked grid scan --------------------------------------------------- #
     def argmin_grid(self, batch_cost_fn: BatchCostFn,
@@ -307,33 +419,157 @@ class JaxPlanBackend:
                 return costs[j], flat[j]
             return scan_chunk
 
-        prog = self._program("scan", batch_cost_fn, cluster,
-                             (chunk, has_params), build)
-        p = self._params(params)
-        best_cost, best_flat = math.inf, -1
-        for lo in range(0, total, chunk):
-            c, f = prog(lo, p)
-            stats.configs_explored += min(chunk, total - lo)
-            c = float(c)
-            if c < best_cost:
-                best_cost, best_flat = c, int(f)
+        with self._scope():
+            prog = self._program("scan", batch_cost_fn, cluster,
+                                 (chunk, has_params), build)
+            p = self._params(params)
+            best_cost, best_flat = math.inf, -1
+            for lo in range(0, total, chunk):
+                c, f = prog(lo, p)
+                stats.configs_explored += min(chunk, total - lo)
+                c = float(c)
+                if c < best_cost:
+                    best_cost, best_flat = c, int(f)
         if best_flat < 0:
             return None, math.inf
         idx = np.unravel_index(best_flat, shape)
         return tuple(int(g[i]) for g, i in zip(grids_np, idx)), best_cost
 
+    def argmin_grid_many(self, batch_cost_fn: BatchCostFn,
+                         cluster: ClusterConditions,
+                         params_many, *,
+                         stats: Optional[PlanningStats] = None,
+                         chunk_size: int = DEFAULT_CHUNK) -> List[Result]:
+        """Chunked grid scan for Q stacked requests as ONE vmapped jitted
+        program per chunk shape: config enumeration is hoisted out of the
+        ``jax.vmap`` (every lane scans the same grid rows), only the cost
+        evaluation is mapped over the ``(Q, P)`` params axis, and the
+        chunk shrinks to ``chunk_size // Q`` so per-dispatch work stays
+        constant as the batch grows (Q padded to even, so the compiled
+        shape set is halved at <= one wasted lane).  Chunk results stay
+        on device until the final cross-chunk argmin — one host sync per
+        call, not one per chunk — which together make the stacked scan
+        strictly cheaper per request than Q sequential scans."""
+        jax, jnp = self._jax, self.xp
+        stats = stats if stats is not None else PlanningStats()
+        pm = np.asarray(params_many, dtype=np.float64)
+        Q, P = pm.shape
+        if Q == 0:
+            return []
+        total = cluster.grid_size()
+        Qpad = _pad_even(Q)
+        chunk = int(min(max(1, chunk_size // Qpad), total))
+        grids_np = grid_arrays(cluster)
+        shape = tuple(len(g) for g in grids_np)
+
+        def build():
+            grids = [jnp.asarray(g) for g in grids_np]
+
+            @jax.jit
+            def scan_chunk(lo, p):
+                flat = lo + jnp.arange(chunk)
+                ok = flat < total
+                safe = jnp.where(ok, flat, 0)
+                idx = jnp.unravel_index(safe, shape)
+                cfgs = jnp.stack([g[i] for g, i in zip(grids, idx)], axis=1)
+                costs = jax.vmap(lambda q: batch_cost_fn(cfgs, q))(p)
+                costs = jnp.where(ok[None, :], costs, jnp.inf)  # (Q, chunk)
+                j = jnp.argmin(costs, axis=1)
+                return jnp.take_along_axis(costs, j[:, None], 1)[:, 0], \
+                    flat[j]
+
+            return scan_chunk
+
+        with self._scope():
+            prog = self._program("scan_many", batch_cost_fn, cluster,
+                                 (chunk, Qpad, P), build)
+            p = self._params(np.pad(pm, ((0, Qpad - Q), (0, 0)),
+                                    mode="edge"))
+            chunk_costs, chunk_flats = [], []
+            for lo in range(0, total, chunk):
+                c, f = prog(lo, p)          # async dispatch: no host sync
+                chunk_costs.append(c)
+                chunk_flats.append(f)
+                stats.configs_explored += Q * min(chunk, total - lo)
+            costs = np.asarray(jnp.stack(chunk_costs))[:, :Q]   # one sync
+            flats = np.asarray(jnp.stack(chunk_flats))[:, :Q]   # (C, Q)
+        grids = grid_arrays(cluster)
+        # np.argmin keeps the first (lowest-lo) chunk on ties — the same
+        # strict-< update order as the sequential per-chunk loop
+        k = np.argmin(costs, axis=0)
+        out: List[Result] = []
+        for q in range(Q):
+            c = float(costs[k[q], q])
+            if math.isinf(c):
+                out.append((None, math.inf))
+            else:
+                out.append((_decode_flat(grids, shape, flats[k[q], q]), c))
+        return out
+
     # -- fused ensemble climb ------------------------------------------------ #
+    def _climb_fn(self, batch_cost_fn: BatchCostFn, grids_np: List[np.ndarray],
+                  max_iters: int, has_params: bool):
+        """The whole multi-start climb — neighbor generation, batched
+        costing, steepest-descent moves, termination — as one traceable
+        ``lax.while_loop`` function ``climb(start_idx, p)``.  Jitted
+        directly for a single request; ``jax.vmap``-ed over the params
+        axis (then jitted) for a stacked request batch."""
+        jax, jnp = self._jax, self.xp
+        n_dims = len(grids_np)
+        grids = [jnp.asarray(g) for g in grids_np]
+        sizes = jnp.asarray([len(g) for g in grids_np])
+        offs = jnp.asarray(_neighbor_offsets(n_dims))
+
+        def values_of(idx):
+            return jnp.stack([grids[d][idx[:, d]]
+                              for d in range(n_dims)], axis=1)
+
+        def climb(start_idx, p):
+            S = start_idx.shape[0]
+            pp = p if has_params else None
+            cost0 = self._call(batch_cost_fn, values_of(start_idx), pp)
+
+            def cond(state):
+                it, moved, _, _, _ = state
+                return moved & (it < max_iters)
+
+            def body(state):
+                it, _, cur, cur_cost, n_eval = state
+                nbr = cur[:, None, :] + offs[None, :, :]   # (S, 2D, D)
+                valid = ((nbr >= 0) & (nbr < sizes)).all(-1)
+                flat = nbr.reshape(-1, n_dims)
+                safe = jnp.clip(flat, 0, sizes - 1)
+                costs = self._call(batch_cost_fn, values_of(safe), pp)
+                costs = jnp.where(valid, costs.reshape(S, 2 * n_dims),
+                                  jnp.inf)
+                j = jnp.argmin(costs, axis=1)
+                best_c = jnp.take_along_axis(costs, j[:, None], 1)[:, 0]
+                improved = best_c < cur_cost
+                step = jnp.take_along_axis(
+                    nbr, j[:, None, None], 1)[:, 0, :]
+                cur = jnp.where(improved[:, None], step, cur)
+                cur_cost = jnp.where(improved, best_c, cur_cost)
+                return (it + 1, improved.any(), cur, cur_cost,
+                        n_eval + valid.sum(dtype=jnp.int32))
+
+            it, _, cur, cur_cost, n_eval = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), jnp.bool_(True),
+                             start_idx, cost0, jnp.int32(0)))
+            i = jnp.argmin(cur_cost)
+            return cur[i], cur_cost[i], n_eval
+
+        return climb
+
     def hill_climb_ensemble(self, batch_cost_fn: BatchCostFn,
                             cluster: ClusterConditions,
                             starts: Optional[Sequence[Sequence[int]]] = None,
                             stats: Optional[PlanningStats] = None, *,
                             params=None, n_random: int = 0, seed: int = 0,
                             max_iters: int = 100_000) -> Result:
-        """The whole multi-start climb — neighbor generation, batched
-        costing, steepest-descent moves, termination — as ONE jitted
-        ``lax.while_loop`` program.  No per-iteration host sync: this is
-        what makes ensembles of dozens of starts cheaper than the numpy
-        2-start climb (ROADMAP open item)."""
+        """One fused-``while_loop`` jitted program for the whole ensemble.
+        No per-iteration host sync: this is what makes ensembles of dozens
+        of starts cheaper than the numpy 2-start climb (ROADMAP open
+        item)."""
         jax, jnp = self._jax, self.xp
         stats = stats if stats is not None else PlanningStats()
         grids_np = grid_arrays(cluster)
@@ -342,59 +578,60 @@ class JaxPlanBackend:
         S = len(cur0)
         has_params = params is not None
 
-        def build():
-            grids = [jnp.asarray(g) for g in grids_np]
-            sizes = jnp.asarray([len(g) for g in grids_np])
-            offs = jnp.asarray(_neighbor_offsets(n_dims))
-
-            def values_of(idx):
-                return jnp.stack([grids[d][idx[:, d]]
-                                  for d in range(n_dims)], axis=1)
-
-            @jax.jit
-            def climb(start_idx, p):
-                pp = p if has_params else None
-                cost0 = self._call(batch_cost_fn, values_of(start_idx), pp)
-
-                def cond(state):
-                    it, moved, _, _, _ = state
-                    return moved & (it < max_iters)
-
-                def body(state):
-                    it, _, cur, cur_cost, n_eval = state
-                    nbr = cur[:, None, :] + offs[None, :, :]   # (S, 2D, D)
-                    valid = ((nbr >= 0) & (nbr < sizes)).all(-1)
-                    flat = nbr.reshape(-1, n_dims)
-                    safe = jnp.clip(flat, 0, sizes - 1)
-                    costs = self._call(batch_cost_fn, values_of(safe), pp)
-                    costs = jnp.where(valid, costs.reshape(S, 2 * n_dims),
-                                      jnp.inf)
-                    j = jnp.argmin(costs, axis=1)
-                    best_c = jnp.take_along_axis(costs, j[:, None], 1)[:, 0]
-                    improved = best_c < cur_cost
-                    step = jnp.take_along_axis(
-                        nbr, j[:, None, None], 1)[:, 0, :]
-                    cur = jnp.where(improved[:, None], step, cur)
-                    cur_cost = jnp.where(improved, best_c, cur_cost)
-                    return (it + 1, improved.any(), cur, cur_cost,
-                            n_eval + valid.sum())
-
-                it, _, cur, cur_cost, n_eval = jax.lax.while_loop(
-                    cond, body, (jnp.int32(0), jnp.bool_(True),
-                                 start_idx, cost0, jnp.int32(0)))
-                i = jnp.argmin(cur_cost)
-                return cur[i], cur_cost[i], n_eval
-            return climb
-
-        prog = self._program("climb", batch_cost_fn, cluster,
-                             (S, max_iters, has_params), build)
-        idx, cost, n_eval = prog(jnp.asarray(cur0), self._params(params))
-        idx = np.asarray(idx)
+        with self._scope():
+            prog = self._program(
+                "climb", batch_cost_fn, cluster, (S, max_iters, has_params),
+                lambda: jax.jit(self._climb_fn(batch_cost_fn, grids_np,
+                                               max_iters, has_params)))
+            idx, cost, n_eval = prog(jnp.asarray(cur0), self._params(params))
+            idx = np.asarray(idx)
+            n_eval = int(n_eval)
         # in-bounds cost evaluations actually performed (the fused loop
         # re-costs converged starts too; that is real work, so count it)
-        stats.configs_explored += S + int(n_eval)
+        stats.configs_explored += S + n_eval
         res = tuple(int(grids_np[d][idx[d]]) for d in range(n_dims))
         return res, float(cost)
+
+    def hill_climb_ensemble_many(self, batch_cost_fn: BatchCostFn,
+                                 cluster: ClusterConditions,
+                                 params_many, *,
+                                 starts=None,
+                                 stats: Optional[PlanningStats] = None,
+                                 n_random: int = 0, seed: int = 0,
+                                 max_iters: int = 100_000) -> List[Result]:
+        """Ensemble climbs for Q stacked requests as ONE ``jax.vmap``-ed
+        jitted ``while_loop`` program (starts shared across requests, the
+        params axis mapped; Q padded to even).  Per-request trajectories
+        are independent under vmap, so each request's local optimum
+        equals its per-request climb."""
+        jax, jnp = self._jax, self.xp
+        stats = stats if stats is not None else PlanningStats()
+        pm = np.asarray(params_many, dtype=np.float64)
+        Q, P = pm.shape
+        if Q == 0:
+            return []
+        grids_np = grid_arrays(cluster)
+        n_dims = len(grids_np)
+        cur0 = start_indices(cluster, starts, n_random, seed)
+        S = len(cur0)
+        Qpad = _pad_even(Q)
+
+        def build():
+            climb = self._climb_fn(batch_cost_fn, grids_np, max_iters, True)
+            return jax.jit(jax.vmap(climb, in_axes=(None, 0)))
+
+        with self._scope():
+            prog = self._program("climb_many", batch_cost_fn, cluster,
+                                 (S, max_iters, Qpad, P), build)
+            p = self._params(np.pad(pm, ((0, Qpad - Q), (0, 0)),
+                                    mode="edge"))
+            idx, cost, n_eval = prog(jnp.asarray(cur0), p)
+            idx = np.asarray(idx)[:Q]
+            cost = np.asarray(cost)[:Q]
+            n_evals = np.asarray(n_eval)[:Q]
+        stats.configs_explored += Q * S + int(n_evals.sum())
+        return [(tuple(int(grids_np[d][idx[q, d]]) for d in range(n_dims)),
+                 float(cost[q])) for q in range(Q)]
 
 
 PlanBackend = Union[NumpyPlanBackend, JaxPlanBackend]
@@ -412,10 +649,10 @@ def have_jax() -> bool:
 
 
 def get_backend(spec: Union[str, PlanBackend, None] = None) -> PlanBackend:
-    """Resolve a backend selection: None/"numpy", "jax", "auto" (jax if
-    importable, else numpy), or an already-constructed backend instance.
-    String selections return process-wide singletons so compiled-program
-    caches are shared."""
+    """Resolve a backend selection: None/"numpy", "jax", "jax_x64" (exact
+    x64-scoped jit), "auto" (jax if importable, else numpy), or an
+    already-constructed backend instance.  String selections return
+    process-wide singletons so compiled-program caches are shared."""
     if spec is None:
         spec = "numpy"
     if not isinstance(spec, str):
@@ -430,7 +667,9 @@ def get_backend(spec: Union[str, PlanBackend, None] = None) -> PlanBackend:
             _SINGLETONS[spec] = NumpyPlanBackend()
         elif spec == "jax":
             _SINGLETONS[spec] = JaxPlanBackend()
+        elif spec == "jax_x64":
+            _SINGLETONS[spec] = JaxPlanBackend(precision="x64")
         else:
-            raise ValueError(f"unknown plan backend {spec!r} "
-                             "(expected 'numpy', 'jax', or 'auto')")
+            raise ValueError(f"unknown plan backend {spec!r} (expected "
+                             "'numpy', 'jax', 'jax_x64', or 'auto')")
     return _SINGLETONS[spec]

@@ -25,6 +25,15 @@ every operator of every query — the cost model fuses with the search.
 ``resource_planning="ensemble"`` climbs a vectorized multi-start
 ensemble (min/max corners + ``ensemble_starts`` random grid starts,
 every ±1 neighbor of every start costed as one batch per iteration).
+
+Deferred planning (repro.core.plan_broker): with ``broker=PlanBroker(...)``
+resource planning becomes request/resolve — ``plan_resources_async`` /
+``prefetch`` queue requests on the session broker and the first
+``result()`` flushes *everything* pending (every operator of every query
+sharing the broker) as stacked array programs.  ``plan_resources`` keeps
+its synchronous signature (submit + resolve) and, with an exact-mode (or
+no) cache, returns bit-identical plans and costs to the per-operator
+loop.  The per-query memo and ``begin_query()`` isolation are unchanged.
 """
 from __future__ import annotations
 
@@ -38,6 +47,7 @@ from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.cost_model import (HiveSimulator, RegressionModel,
                                    _split_configs, monetary_cost)
 from repro.core.hillclimb import brute_force, hill_climb, hill_climb_multi
+from repro.core.plan_broker import PlanBroker, PlanRequest
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.planning_backend import PlanBackend, get_backend
 from repro.core.schema import Schema
@@ -111,6 +121,36 @@ def has_edge(schema: Schema, l: PlanNode, r: PlanNode) -> bool:
 
 # ------------------------------ costing ------------------------------------ #
 
+class _Resolved:
+    """Already-resolved plan future (non-broker and memo-hit paths)."""
+
+    __slots__ = ("_value",)
+
+    def __init__(self, value):
+        self._value = value
+
+    def result(self):
+        return self._value
+
+
+class _CostingFuture:
+    """Broker future that lands in the costing's per-query memo when
+    resolved, so later same-operator calls stay memo-cheap."""
+
+    __slots__ = ("_costing", "_mkey", "_fut")
+
+    def __init__(self, costing, mkey, fut):
+        self._costing = costing
+        self._mkey = mkey
+        self._fut = fut
+
+    def result(self):
+        out = self._fut.result()
+        self._costing._plan_memo[self._mkey] = out
+        self._costing._pending.pop(self._mkey, None)
+        return out
+
+
 @dataclasses.dataclass
 class OperatorCosting:
     """Joint query+resource costing of a single join operator."""
@@ -126,6 +166,10 @@ class OperatorCosting:
     backend: Union[str, PlanBackend, None] = None      # None -> numpy
     ensemble_starts: int = 24                # random starts for "ensemble"
     seed: int = 0
+    # session planning broker (plan_broker): when set, resource planning
+    # defers to it — every operator of every query sharing this broker
+    # is planned in stacked flushes instead of one program per request
+    broker: Optional[PlanBroker] = None
     # per-query memo of planned resources, keyed (impl, ss, ls, objective)
     _plan_memo: Dict[Tuple, Tuple[Tuple[int, ...], float]] = \
         dataclasses.field(default_factory=dict, repr=False)
@@ -134,11 +178,16 @@ class OperatorCosting:
     # search programs (ss/ls travel as traced params)
     _grid_fn_cache: Dict = dataclasses.field(default_factory=dict,
                                              repr=False)
+    # in-flight broker futures of the current query, keyed like the memo
+    _pending: Dict[Tuple, "_CostingFuture"] = \
+        dataclasses.field(default_factory=dict, repr=False)
 
     def begin_query(self) -> None:
-        """Reset the per-query resource-plan memo (planners call this once
-        per optimized query; the cross-query cache survives)."""
+        """Reset the per-query resource-plan memo and any not-yet-resolved
+        broker prefetches (planners call this once per optimized query;
+        the cross-query cache and the session broker survive)."""
         self._plan_memo.clear()
+        self._pending.clear()
 
     def _op_cost_at(self, impl: str, ss: float, ls: float,
                     res: Tuple[int, ...]) -> float:
@@ -204,9 +253,86 @@ class OperatorCosting:
         bucket = int(round(math.log2(max(ls, 1e-3))))
         return f"join:{self.objective}:ls{bucket}"
 
+    def _broker_mode(self, impl: str) -> Optional[Tuple[str, int]]:
+        """(broker search mode, n_random) when this request can defer to
+        the session broker; None keeps the synchronous per-operator path
+        (so broker and non-broker costings stay behavior-identical)."""
+        if self.broker is None or self.resource_planning == "fixed":
+            return None
+        if not hasattr(self.models[impl], "cost_grid"):
+            return None
+        mode = self.resource_planning
+        if mode in ("brute", "batched"):
+            return ("grid", 0)
+        if mode == "ensemble":
+            return ("ensemble", self.ensemble_starts)
+        if mode == "hillclimb_batched":
+            return ("ensemble", 0)
+        if mode == "hillclimb" and self.broker.backend.name != "numpy":
+            # on numpy this mode is the scalar Algorithm 1 (single
+            # min-corner start) — not a broker shape; non-numpy backends
+            # already route it through the 2-corner ensemble
+            return ("ensemble", 0)
+        return None
+
+    def plan_resources_async(self, impl: str, ss: float, ls: float):
+        """Deferred resource planning: submit to the session broker and
+        return a future; ``result()`` flushes every pending request of
+        every caller sharing the broker.  Falls back to an immediately
+        resolved future when no broker (or an unsupported mode) is
+        configured."""
+        mkey = (impl, ss, ls, self.objective)
+        memo = self._plan_memo.get(mkey)
+        if memo is not None:
+            return _Resolved(memo)
+        pend = self._pending.get(mkey)
+        if pend is not None:
+            return pend
+        mode = self._broker_mode(impl)
+        if mode is None:
+            return _Resolved(self.plan_resources(impl, ss, ls))
+        backend = self.broker.backend
+        grid_fn = self._grid_fn(impl, backend)
+        if grid_fn is None:
+            return _Resolved(self.plan_resources(impl, ss, ls))
+        fallback = None if getattr(backend, "exact", False) \
+            else self._grid_fn(impl, get_backend("numpy"))
+        req = PlanRequest(
+            fn=grid_fn, cluster=self.cluster,
+            params=np.asarray([ss, ls], dtype=np.float64),
+            commit_fn=lambda res: self._op_cost_at(impl, ss, ls,
+                                                   tuple(res)),
+            mode=mode[0], n_random=mode[1], seed=self.seed,
+            fallback_fn=fallback, cache=self.cache,
+            cache_key=(impl, self._cache_kind(ls), round(ss, 6)),
+            stats=self.stats)
+        wrapper = _CostingFuture(self, mkey, self.broker.submit(req))
+        self._pending[mkey] = wrapper
+        return wrapper
+
+    def prefetch(self, impl: str, ss: float, ls: float) -> None:
+        """Queue one operator's resource planning on the broker without
+        resolving it (no-op without a broker)."""
+        if self.broker is not None:
+            self.plan_resources_async(impl, ss, ls)
+
+    def prefetch_join(self, schema: Schema, l: PlanNode, r: PlanNode,
+                      impls: Sequence[str] = IMPLS) -> None:
+        """Queue the candidate costings of joining l and r (both operator
+        implementations) — planners call this for a whole enumeration
+        level before resolving, so one flush plans the level."""
+        if self.broker is None:
+            return
+        ss = min(l.size_gb, r.size_gb)
+        ls = max(l.size_gb, r.size_gb)
+        for impl in impls:
+            self.prefetch(impl, ss, ls)
+
     def plan_resources(self, impl: str, ss: float, ls: float
                        ) -> Tuple[Tuple[int, ...], float]:
         """Resource planning for one operator (memo -> cache -> search)."""
+        if self._broker_mode(impl) is not None:
+            return self.plan_resources_async(impl, ss, ls).result()
         # exact floats on purpose: the memo must be behavior-preserving
         # (same (ss, ls) -> same plan and cost); approximate reuse is the
         # cross-query cache's job, not the memo's
@@ -251,15 +377,25 @@ class OperatorCosting:
             if res is not None:
                 # commit through the scalar float64 path (guards the
                 # float32 jax backend; exact no-op on numpy)
+                raw = cost
                 cost = fn(res)
                 if not math.isfinite(cost) and backend.name != "numpy":
-                    # float32 rounding let an infeasible-in-float64 winner
-                    # through: redo exactly on the numpy batched path so a
-                    # feasible config is never reported (or memoized) as
-                    # infeasible
-                    res, cost = brute_force(
-                        fn, self.cluster, self.stats,
-                        batch_cost_fn=self._batch_fn(impl, ss, ls))
+                    if getattr(backend, "exact", False):
+                        # x64-scoped jit: selection is exact, so search
+                        # and commit must agree on feasibility — the
+                        # float64 redo shrinks to a parity assertion
+                        assert not math.isfinite(raw), (
+                            f"exact backend {backend.name} selected {res} "
+                            f"with finite search cost {raw} but infinite "
+                            f"float64 commit")
+                    else:
+                        # float32 rounding let an infeasible-in-float64
+                        # winner through: redo exactly on the numpy
+                        # batched path so a feasible config is never
+                        # reported (or memoized) as infeasible
+                        res, cost = brute_force(
+                            fn, self.cluster, self.stats,
+                            batch_cost_fn=self._batch_fn(impl, ss, ls))
         elif mode in ("brute", "batched"):
             # the batched backend scans the same grid with identical
             # arithmetic and tie-breaking; scalar loop is the fallback for
@@ -276,7 +412,7 @@ class OperatorCosting:
         else:
             res, cost = hill_climb(fn, self.cluster, stats=self.stats)
         if self.cache is not None and math.isfinite(cost):
-            self.cache.insert(impl, kind, key, res)
+            self.cache.insert(impl, kind, key, res, stats=self.stats)
         self._plan_memo[mkey] = (res, cost)
         return res, cost
 
@@ -286,9 +422,15 @@ class OperatorCosting:
         rows, rb = join_cardinality(schema, l, r)
         ss = min(l.size_gb, r.size_gb)
         ls = max(l.size_gb, r.size_gb)
+        # submit every implementation's planning before resolving any, so
+        # one broker flush covers the whole candidate set
+        futs = [(impl, self.plan_resources_async(impl, ss, ls))
+                for impl in impls] if self.broker is not None else \
+               [(impl, None) for impl in impls]
         best = None
-        for impl in impls:
-            res, cost = self.plan_resources(impl, ss, ls)
+        for impl, fut in futs:
+            res, cost = fut.result() if fut is not None \
+                else self.plan_resources(impl, ss, ls)
             if best is None or cost < best[1]:
                 best = (impl, cost, res)
         impl, cost, res = best

@@ -4,13 +4,21 @@
     p => (r, c)  resources_for_plan   : cheapest resources meeting a target
     => (p, r)    joint                : best joint query+resource plan
     c => (p, r)  for_budget           : best performance under a $ budget
+
+Multi-tenant sessions: ``plan_queries([...])`` optimizes several
+concurrent queries against ONE session planning broker
+(repro.core.plan_broker) — every query's base-level candidate costings
+are queued before any query resolves, so the first flush plans the whole
+batch's shared operators as stacked array programs and the broker's
+session memo / the resource-plan cache dedup the rest.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import time
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -18,9 +26,10 @@ from repro.core.cluster import ClusterConditions, PlanningStats, paper_cluster
 from repro.core.cost_model import (RegressionModel, _split_configs,
                                    monetary_cost, paper_models)
 from repro.core.fast_randomized import fast_randomized_plan
+from repro.core.plan_broker import PlanBroker
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.planning_backend import PlanBackend, get_backend
-from repro.core.plans import IMPLS, OperatorCosting, PlanNode
+from repro.core.plans import IMPLS, OperatorCosting, PlanNode, has_edge, leaf
 from repro.core.schema import Schema
 from repro.core.selinger import selinger_plan
 
@@ -60,6 +69,9 @@ class RAQO:
     seed: int = 0
     # array-search backend (planning_backend): None/"numpy" | "jax" | "auto"
     backend: Union[str, PlanBackend, None] = None
+    # session planning broker shared by every costing this RAQO creates;
+    # plan_queries constructs one on demand when unset
+    broker: Optional[PlanBroker] = None
     # param-style SLA cost fns per impl (jax program reuse across walks)
     _sla_fn_cache: Dict = dataclasses.field(default_factory=dict,
                                             repr=False)
@@ -71,12 +83,14 @@ class RAQO:
                                               repr=False)
 
     def _costing(self, objective: str = "time",
-                 fixed: Optional[Tuple[int, ...]] = None) -> OperatorCosting:
+                 fixed: Optional[Tuple[int, ...]] = None,
+                 broker: Optional[PlanBroker] = None) -> OperatorCosting:
         return OperatorCosting(
             models=self.models, cluster=self.cluster,
             resource_planning="fixed" if fixed else self.resource_planning,
             fixed_resources=fixed or (10, 4), cache=self.cache,
             objective=objective, backend=self.backend,
+            broker=broker if broker is not None else self.broker,
             _grid_fn_cache=self._grid_fn_shared)
 
     def _plan(self, tables: Sequence[str], costing: OperatorCosting
@@ -125,6 +139,35 @@ class RAQO:
         plan = self._plan(tables, costing)
         return self._wrap(plan, t0, costing)
 
+    def plan_queries(self, queries: Sequence[Sequence[str]],
+                     objective: str = "time") -> List[JointPlan]:
+        """=> [(p, r), ...] for several concurrent (multi-tenant) queries
+        sharing ONE session broker flush.
+
+        Every query gets its own costing/stats (per-query memo isolation
+        unchanged), but all of them defer resource planning to one
+        ``PlanBroker``: before any query is optimized, every query's
+        base-table join candidates are queued, so the first resolve
+        flushes the whole batch's level-1 costings as stacked array
+        programs; operators recurring across queries (the paper's §V
+        recurring-job story) dedup through the broker's session memo or
+        the shared resource-plan cache instead of re-searching."""
+        broker = self.broker if self.broker is not None \
+            else PlanBroker(backend=self.backend)
+        costings = [self._costing(objective, broker=broker)
+                    for _ in queries]
+        for tables, costing in zip(queries, costings):
+            leaves = {t: leaf(self.schema, t) for t in tables}
+            for a, b in itertools.combinations(tables, 2):
+                if has_edge(self.schema, leaves[a], leaves[b]):
+                    costing.prefetch_join(self.schema, leaves[a], leaves[b])
+        out: List[JointPlan] = []
+        for tables, costing in zip(queries, costings):
+            t0 = time.perf_counter()
+            plan = self._plan(tables, costing)
+            out.append(self._wrap(plan, t0, costing))
+        return out
+
     def plan_for_resources(self, tables: Sequence[str],
                            resources: Tuple[int, ...]) -> JointPlan:
         """r => p : resources fixed (e.g. tenant quota), optimize the plan."""
@@ -170,10 +213,11 @@ class RAQO:
             if hasattr(model, "cost_grid"):
                 res, m = backend.argmin_grid(_sla_fn(impl, backend),
                                              self.cluster, params=params)
-                if res is not None and backend.name != "numpy":
+                if res is not None and not getattr(backend, "exact", False):
                     # re-evaluate the winner in float64; if float32 jax
                     # rounding let an SLA-violating config win, redo the
                     # scan on the exact (still vectorized) numpy backend
+                    # (exact backends — numpy, jax_x64 — skip the redo)
                     nc, cs = res
                     t = model.cost(ss, cs, nc, ls=ls)
                     if not (math.isfinite(t) and t <= target_time):

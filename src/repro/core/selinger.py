@@ -40,7 +40,23 @@ def selinger_plan(schema: Schema, tables: Sequence[str],
         return best[frozenset(tables)]
 
     for size in range(2, n + 1):
-        for combo in itertools.combinations(tables, size):
+        combos = list(itertools.combinations(tables, size))
+        if costing.broker is not None:
+            # batch the whole enumeration level: queue every candidate
+            # join's costings (both operator implementations) on the
+            # session broker, so the first resolve below flushes the
+            # entire level as stacked array programs instead of planning
+            # one operator per program call (paper §VI-B at §VII-C scale)
+            for combo in combos:
+                s = frozenset(combo)
+                for t in combo:
+                    sub = best.get(s - {t})
+                    if sub is None:
+                        continue
+                    tleaf = best[frozenset({t})]
+                    if has_edge(schema, sub, tleaf):
+                        costing.prefetch_join(schema, sub, tleaf, impls)
+        for combo in combos:
             s = frozenset(combo)
             cand: Optional[PlanNode] = None
             for t in combo:

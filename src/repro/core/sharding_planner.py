@@ -24,6 +24,13 @@ Use-cases mirror §IV:
     c => (p,r): best time within a chip-seconds $$   (for_budget)
 Adaptive RAQO (§VIII): ``replan`` re-optimizes for degraded cluster
 conditions (lost pods/chips) — used by the elastic restart path.
+
+Session broker: with ``broker=PlanBroker(...)`` the per-choice searches
+of ``joint`` / ``for_budget`` / ``replan`` defer to the same session
+broker the DB-domain planners use — all plan choices (and any other
+tenant's requests in flight, TPU or DB) are submitted before any
+resolves, so one flush plans them as stacked array programs, fronted by
+the resource-plan cache with current-cluster validation.
 """
 from __future__ import annotations
 
@@ -36,6 +43,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.cluster import ClusterConditions, PlanningStats, ResourceDim
+from repro.core.plan_broker import PlanBroker, PlanRequest
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.planning_backend import PlanBackend, get_backend
 from repro.core.roofline import (HW, Resources, RooflineTerms, chip_seconds,
@@ -125,6 +133,9 @@ class ShardingPlanner:
     backend: Union[str, PlanBackend, None] = "numpy"   # numpy | jax | auto
     ensemble_starts: int = 24                  # random starts for "ensemble"
     seed: int = 0
+    # session planning broker shared with other planners (DB and TPU
+    # domains batch through the same flushes); None keeps the inline path
+    broker: Optional[PlanBroker] = None
     # per-(cfg, shape, choice) batch-cost fns: reusing the same fn object
     # lets the jax backend reuse its compiled search programs
     _grid_fn_cache: Dict = dataclasses.field(default_factory=dict,
@@ -203,12 +214,72 @@ class ShardingPlanner:
                                      else 1)
         return cfg.active_param_count() / 1e9 * 1e6 + toks / 1e3
 
+    def _applicable_choices(self, cfg: ModelConfig, shape: ShapeConfig):
+        for choice in PLAN_CHOICES[shape.kind]:
+            # inapplicable choices (e.g. causal_skip for attention-free)
+            if cfg.family == "ssm" and choice.get("schedule") == "causal_skip":
+                continue
+            yield choice
+
+    def _joint_broker(self, cfg: ModelConfig, shape: ShapeConfig,
+                      arch: str, chip_budget: Optional[int],
+                      t0: float) -> ShardingDecision:
+        """joint() through the session broker: submit every plan choice's
+        resource search (cache-fronted, current-cluster-validated), then
+        resolve — the first resolve flushes everything pending on the
+        broker, this planner's choices and any other tenant's requests
+        alike, as stacked array programs."""
+        broker = self.broker
+        backend = broker.backend
+        stats = PlanningStats()
+        dims = self.cluster.dims(shape)
+        params = self._params(chip_budget)
+        key = self._data_key(cfg, shape)
+        mode = "grid" if self.resource_planning == "brute" else "ensemble"
+        n_random = self.ensemble_starts \
+            if self.resource_planning == "ensemble" else 0
+        futs = []
+        for choice in self._applicable_choices(cfg, shape):
+            model_id = f"{shape.kind}:{sorted(choice.items())}"
+            scalar_fn = self._cost_fn(cfg, shape, choice, chip_budget)
+            fallback = None if getattr(backend, "exact", False) else \
+                self._grid_fn(cfg, shape, choice, get_backend("numpy"))
+            req = PlanRequest(
+                fn=self._grid_fn(cfg, shape, choice, backend), cluster=dims,
+                params=params, commit_fn=scalar_fn, mode=mode,
+                n_random=n_random, seed=self.seed,
+                scan_fallback=(mode == "ensemble"), fallback_fn=fallback,
+                cache=self.cache, cache_key=(model_id, cfg.family, key),
+                validate_hit=True, stats=stats)
+            futs.append((choice, scalar_fn, broker.submit(req)))
+        best = None
+        for choice, scalar_fn, fut in futs:
+            res, cost = fut.result()
+            if res is None or not math.isfinite(cost):
+                continue
+            r = Resources(*res)
+            t = terms_for(cfg, shape, r, **{**choice, "hw": self._hw()})
+            if best is None or cost < best.objective_value:
+                best = ShardingDecision(
+                    arch=arch or cfg.name, shape=shape.name, resources=r,
+                    plan_choice=choice, terms=t, objective_value=cost,
+                    planner_seconds=0.0, stats=stats)
+        if best is None:
+            raise RuntimeError(
+                f"no feasible (plan, resources) for {cfg.name} x {shape.name}"
+                f" under {self.cluster}")
+        best.planner_seconds = time.perf_counter() - t0
+        return best
+
     def joint(self, cfg: ModelConfig, shape: ShapeConfig, arch: str = "",
               chip_budget: Optional[int] = None) -> ShardingDecision:
         """=> (p, r): enumerate plan choices (operator implementations),
         search resources per choice on the array backend — the paper's
-        §VI loop with the inner search fully vectorized."""
+        §VI loop with the inner search fully vectorized.  With a session
+        broker configured, all choices are planned in one flush."""
         t0 = time.perf_counter()
+        if self.broker is not None:
+            return self._joint_broker(cfg, shape, arch, chip_budget, t0)
         stats = PlanningStats()
         dims = self.cluster.dims(shape)
         backend = get_backend(self.backend)
@@ -253,23 +324,33 @@ class ShardingPlanner:
                 continue
             # commit through the scalar float64 path (guards the float32
             # jax backend; exact no-op for the numpy backend)
+            raw = cost if searched else math.inf
             cost = scalar_fn(tuple(res))
             if not math.isfinite(cost) and backend.name != "numpy":
-                # float32 rounding let an infeasible-in-float64 winner
-                # through: redo this choice on the exact numpy backend
-                np_backend = get_backend("numpy")
-                np_fn = self._grid_fn(cfg, shape, choice, np_backend)
-                res, _ = np_backend.argmin_grid(np_fn, dims, stats,
-                                                params=params)
-                if res is None:
-                    continue
-                cost = scalar_fn(tuple(res))
+                if getattr(backend, "exact", False):
+                    # x64-scoped jit: selection is exact — search and
+                    # commit must agree on feasibility (parity assertion
+                    # replaces the float64 redo)
+                    assert not (searched and math.isfinite(raw)), (
+                        f"exact backend {backend.name} selected {res} with "
+                        f"finite search cost {raw} but infinite commit")
+                else:
+                    # float32 rounding let an infeasible-in-float64 winner
+                    # through: redo this choice on the exact numpy backend
+                    np_backend = get_backend("numpy")
+                    np_fn = self._grid_fn(cfg, shape, choice, np_backend)
+                    res, _ = np_backend.argmin_grid(np_fn, dims, stats,
+                                                    params=params)
+                    if res is None:
+                        continue
+                    cost = scalar_fn(tuple(res))
             if not math.isfinite(cost):
                 continue
             # persist to the cross-query cache only after the float64
             # commit accepted the plan (never cache float32-only winners)
             if searched and self.cache is not None:
-                self.cache.insert(model_id, cfg.family, key, res)
+                self.cache.insert(model_id, cfg.family, key, res,
+                                  stats=stats)
             r = Resources(*res)
             # decision terms under the planner's own hardware view, like
             # the search itself (matters for non-default hbm_per_chip)

@@ -1,0 +1,386 @@
+"""Session-broker parity: batched multi-query planning through the
+PlanBroker must return exactly the plans (and costs) of the sequential
+per-operator loop — on numpy bit-identically, on jax argmin-identically —
+across random schemas, mixed objectives, ragged grids, and warm/cold
+caches; plus the begin_query() isolation regression, the x64-exact
+backend, and the per-(model, kind) cache counters."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import (ClusterConditions, PlanningStats,
+                                ResourceDim, paper_cluster)
+from repro.core.cost_model import simulator_cost_models
+from repro.core.fast_randomized import fast_randomized_plan
+from repro.core.plan_broker import PlanBroker
+from repro.core.plan_cache import ResourcePlanCache
+from repro.core.planning_backend import get_backend
+from repro.core.plans import OperatorCosting
+from repro.core.raqo import RAQO
+from repro.core.schema import random_query, random_schema, tpch_schema
+from repro.core.selinger import selinger_plan
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+
+def _costing(cluster=None, broker=None, cache=None, mode="batched",
+             objective="time", backend=None):
+    return OperatorCosting(models=simulator_cost_models(),
+                           cluster=cluster or paper_cluster(40, 10),
+                           resource_planning=mode, broker=broker,
+                           cache=cache, objective=objective,
+                           backend=backend)
+
+
+def _ragged_cluster():
+    """Stepped dim with a ragged top plus an explicit-values dim."""
+    return ClusterConditions(dims=(
+        ResourceDim("num_containers", 1, 38, step=3),
+        ResourceDim("container_gb", 1, 10, values=(1, 2, 3, 5, 8, 10)),
+    ))
+
+
+def _ops(rng, n):
+    impls = ("SMJ", "BHJ")
+    return [(impls[int(rng.integers(2))],
+             float(np.round(rng.uniform(0.2, 8.0), 3)),
+             float(np.round(rng.uniform(5.0, 300.0), 3))) for _ in range(n)]
+
+
+def _tree_sig(p):
+    if p is None:
+        return None
+    if p.is_leaf:
+        return tuple(sorted(p.tables))
+    return (p.impl, p.resources, p.op_cost, p.total_cost,
+            _tree_sig(p.left), _tree_sig(p.right))
+
+
+# --------------------- operator-level broker parity ------------------------ #
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       mode=st.sampled_from(["batched", "hillclimb_batched", "ensemble"]),
+       objective=st.sampled_from(["time", "money"]),
+       ragged=st.booleans(), warm=st.booleans())
+def test_hypothesis_broker_bit_identical_numpy(seed, mode, objective,
+                                               ragged, warm):
+    """Broker-batched multi-query planning == the sequential per-operator
+    loop, plans AND costs, on random operator workloads: mixed objectives,
+    ragged grids, exact-mode cache warm and cold."""
+    rng = np.random.default_rng(seed)
+    cluster = _ragged_cluster() if ragged else paper_cluster(35, 9)
+    queries = [_ops(rng, 3) for _ in range(3)]
+    # duplicate one operator across two queries (cross-query dedup path)
+    queries[1][0] = queries[0][1]
+    caches = [ResourcePlanCache("exact"), ResourcePlanCache("exact")] \
+        if warm or rng.random() < 0.5 else [None, None]
+    seq = _costing(cluster, cache=caches[0], mode=mode, objective=objective)
+    brk = _costing(cluster, broker=PlanBroker("numpy"), cache=caches[1],
+                   mode=mode, objective=objective)
+    if warm:
+        for c in (seq, brk):
+            c.plan_resources(*queries[0][0])
+            c.begin_query()
+    expect, got = [], []
+    for q in queries:
+        seq.begin_query()
+        expect += [seq.plan_resources(*op) for op in q]
+    for q in queries:                        # prefetch-everything path
+        brk.begin_query()
+        for op in q:
+            brk.prefetch(*op)
+    for q in queries:
+        brk.begin_query()
+        got += [brk.plan_resources(*op) for op in q]
+    assert got == expect                     # bit-identical, ties included
+
+
+@needs_jax
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       mode=st.sampled_from(["batched", "ensemble"]), ragged=st.booleans())
+def test_hypothesis_broker_jax_matches_numpy(seed, mode, ragged):
+    """jax broker plans == numpy broker plans (winners re-committed
+    through float64 on both ends; small grids keep f32 ties away)."""
+    rng = np.random.default_rng(seed)
+    cluster = _ragged_cluster() if ragged else paper_cluster(30, 8)
+    ops = _ops(rng, 5)
+    res = {}
+    for be in ("numpy", "jax"):
+        c = _costing(cluster, broker=PlanBroker(be), mode=mode)
+        for op in ops:
+            c.prefetch(*op)
+        res[be] = [c.plan_resources(*op) for op in ops]
+    for (rj, cj), (rn, cn) in zip(res["jax"], res["numpy"]):
+        if math.isinf(cn):
+            # all-infeasible operator: the climb reports its start config
+            # at inf, the f64 redo reports None — both mean "no plan"
+            assert math.isinf(cj)
+        else:
+            assert rj == rn
+            assert cj == pytest.approx(cn, rel=1e-12)
+
+
+def test_broker_dedup_and_memo_counters():
+    """Duplicate submissions resolve from dedup (one search), and the
+    session memo answers resubmissions after begin_query without a new
+    batch."""
+    broker = PlanBroker("numpy")
+    c = _costing(broker=broker)
+    for _ in range(3):
+        c.prefetch("SMJ", 2.0, 74.0)         # per-query pending dedups
+    c.prefetch("SMJ", 3.0, 74.0)
+    r1 = c.plan_resources("SMJ", 2.0, 74.0)
+    assert broker.stats.broker_requests == 2
+    assert broker.stats.broker_batches == 1  # one stacked program, Q=2
+    c.begin_query()
+    r2 = c.plan_resources("SMJ", 2.0, 74.0)  # resubmits -> session memo
+    assert r2 == r1
+    assert broker.stats.broker_dedup_hits >= 1
+    assert broker.stats.broker_batches == 1  # no new search
+
+
+def test_begin_query_isolation_survives_broker():
+    """The per-query memo still resets per query with a broker attached:
+    ls-bucketed reuse never leaks across begin_query (regression for the
+    broker refactor; mirrors the non-broker test in
+    test_batched_costing.py)."""
+    broker = PlanBroker("numpy")
+    cache = ResourcePlanCache("exact")
+    c = _costing(broker=broker, cache=cache)
+    c.plan_resources("SMJ", 2.0, 4.0)
+    c.begin_query()
+    r_big, _ = c.plan_resources("SMJ", 2.0, 400.0)
+    fresh = _costing(cache=ResourcePlanCache("exact"))
+    r_fresh, _ = fresh.plan_resources("SMJ", 2.0, 400.0)
+    assert r_big == r_fresh
+    # and within one query the memo prevents re-submission entirely
+    before = broker.stats.broker_requests
+    c.plan_resources("SMJ", 2.0, 400.0)
+    assert broker.stats.broker_requests == before
+
+
+# ----------------------- planner-level broker parity ----------------------- #
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 500), n=st.integers(2, 5),
+       mode=st.sampled_from(["batched", "ensemble"]))
+def test_hypothesis_selinger_broker_identical(seed, n, mode):
+    schema = random_schema(6, seed=seed)
+    q = random_query(schema, n, seed=seed)
+    p1 = selinger_plan(schema, q, _costing(mode=mode))
+    p2 = selinger_plan(schema, q,
+                       _costing(broker=PlanBroker("numpy"), mode=mode))
+    assert _tree_sig(p1) == _tree_sig(p2)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_hypothesis_fast_randomized_broker_identical(seed):
+    """Seeded FastRandomized runs draw the same mutations and must return
+    the same best plan and archive whether costing is brokered or not
+    (the choose/prefetch/apply split preserves the RNG stream)."""
+    schema = random_schema(7, seed=seed)
+    q = random_query(schema, 4, seed=seed)
+    b1, a1 = fast_randomized_plan(schema, q, _costing(), seed=seed)
+    b2, a2 = fast_randomized_plan(
+        schema, q, _costing(broker=PlanBroker("numpy")), seed=seed)
+    assert _tree_sig(b1) == _tree_sig(b2)
+    assert [_tree_sig(p) for p in a1.plans] == \
+        [_tree_sig(p) for p in a2.plans]
+
+
+@pytest.mark.parametrize("objective", ["time", "money"])
+def test_raqo_plan_queries_matches_sequential_joint(objective):
+    schema = tpch_schema(100)
+    queries = [["lineitem", "orders", "customer"],
+               ["lineitem", "part", "supplier"],
+               ["orders", "customer", "nation", "region"],
+               ["lineitem", "orders", "customer"]]     # recurring tenant
+    seq = RAQO(schema, resource_planning="batched")
+    expect = [seq.joint(q, objective) for q in queries]
+    got = RAQO(schema, resource_planning="batched").plan_queries(
+        queries, objective)
+    assert len(got) == len(queries)
+    for a, b in zip(expect, got):
+        assert _tree_sig(a.plan) == _tree_sig(b.plan)
+        assert b.exec_time == a.exec_time and b.money == a.money
+
+
+def test_raqo_plan_queries_dedups_recurring_queries():
+    schema = tpch_schema(100)
+    broker = PlanBroker("numpy")
+    r = RAQO(schema, resource_planning="batched", broker=broker)
+    plans = r.plan_queries([["lineitem", "orders", "customer"]] * 3)
+    assert broker.stats.broker_dedup_hits > 0
+    sigs = {_tree_sig(p.plan) for p in plans}
+    assert len(sigs) == 1
+
+
+# --------------------------- TPU domain via broker ------------------------- #
+
+@pytest.mark.parametrize("rp", ["hillclimb", "ensemble", "brute"])
+def test_sharding_joint_broker_identical(rp):
+    from repro.configs import get_config, get_shape
+    from repro.core.sharding_planner import ShardingPlanner
+    cfg, shape = get_config("deepseek-67b"), get_shape("train_4k")
+    d1 = ShardingPlanner(resource_planning=rp).joint(cfg, shape)
+    d2 = ShardingPlanner(resource_planning=rp,
+                         broker=PlanBroker("numpy")).joint(cfg, shape)
+    assert d2.resources == d1.resources
+    assert d2.plan_choice == d1.plan_choice
+    assert d2.objective_value == d1.objective_value
+
+
+def test_sharding_budget_and_replan_broker_identical_with_cache():
+    """for_budget / replan route through the broker with cache-hit
+    validation under current cluster conditions; an identically warmed
+    inline planner must agree call for call."""
+    from repro.configs import get_config, get_shape
+    from repro.core.sharding_planner import ShardingPlanner
+    cfg, shape = get_config("deepseek-67b"), get_shape("train_4k")
+    pb = ShardingPlanner(resource_planning="ensemble",
+                         broker=PlanBroker("numpy"),
+                         cache=ResourcePlanCache("exact"))
+    pi = ShardingPlanner(resource_planning="ensemble",
+                         cache=ResourcePlanCache("exact"))
+    for call in (lambda p: p.for_budget(cfg, shape, chip_budget=256),
+                 lambda p: p.replan(cfg, shape, lost_chips=200),
+                 lambda p: p.joint(cfg, shape)):
+        d, dr = call(pb), call(pi)
+        assert d.resources == dr.resources
+        assert d.objective_value == dr.objective_value
+
+
+def test_db_and_tpu_share_one_broker_flush():
+    """DB and TPU requests queued on one broker resolve in one shared
+    flush (the cross-domain batching the broker exists for)."""
+    from repro.configs import get_config, get_shape
+    from repro.core.sharding_planner import ShardingPlanner
+    broker = PlanBroker("numpy")
+    db = _costing(broker=broker)
+    db.prefetch("SMJ", 2.0, 74.0)
+    db.prefetch("BHJ", 1.0, 74.0)
+    assert broker.pending_count() == 2
+    tpu = ShardingPlanner(resource_planning="hillclimb", broker=broker)
+    d = tpu.joint(get_config("smollm-360m"), get_shape("train_4k"))
+    assert broker.pending_count() == 0        # TPU resolve flushed DB too
+    assert db.plan_resources("SMJ", 2.0, 74.0)[0] is not None
+    assert d.resources.chips >= 1
+    ref = ShardingPlanner(resource_planning="hillclimb").joint(
+        get_config("smollm-360m"), get_shape("train_4k"))
+    assert d.resources == ref.resources
+
+
+# ------------------------------ x64 backend -------------------------------- #
+
+@needs_jax
+def test_jax_x64_backend_exact_argmin():
+    """The x64-scoped jit path is exact: on a cost surface whose float32
+    rounding flips the argmin, jax_x64 must agree with numpy bit-for-bit
+    (config AND cost), closing the 'exact selection' open item."""
+    cluster = ClusterConditions(dims=(ResourceDim("a", 0, 63),
+                                      ResourceDim("b", 0, 0)))
+    base = np.full(64, 2.0)
+    base[17] = 2.0 - 1e-12           # invisible in float32, wins in f64
+    import jax.numpy as jnp
+
+    def mk(xp):
+        def fn(cfgs, params=None):
+            # convert at trace time (like the cost models, which keep
+            # numpy coefficients): under the x64 scope this stays f64
+            return xp.asarray(base)[xp.asarray(cfgs)[:, 0]]
+        return fn
+
+    r_np, c_np = get_backend("numpy").argmin_grid(mk(np), cluster)
+    r_32, _ = get_backend("jax").argmin_grid(mk(jnp), cluster)
+    x64 = get_backend("jax_x64")
+    assert x64.exact and x64.name == "jax_x64"
+    r_64, c_64 = x64.argmin_grid(mk(jnp), cluster)
+    assert r_np == (17, 0)
+    assert r_32 != r_np              # the f32 backend cannot see the tie
+    assert r_64 == r_np and c_64 == c_np
+    # stacked many-path is exact too
+    [(rm, cm)] = x64.argmin_grid_many(mk(jnp), cluster, np.zeros((1, 1)))
+    assert rm == r_np and cm == c_np
+
+
+@needs_jax
+def test_operator_costing_x64_matches_numpy_exactly():
+    for mode in ("batched", "ensemble"):
+        c_np = _costing(mode=mode)
+        c_64 = _costing(mode=mode, backend="jax_x64",
+                        broker=PlanBroker("jax_x64"))
+        for ss, ls in ((0.5, 74.0), (2.0, 10.0), (6.0, 200.0)):
+            assert c_64.plan_resources("SMJ", ss, ls) == \
+                c_np.plan_resources("SMJ", ss, ls)
+
+
+def test_scalar_only_oom_predicate_survives_stacked_path():
+    """A python-scalar-only OOM predicate (raises on arrays) must degrade
+    to per-row evaluation on the broker's stacked (Q, 1)-ss path instead
+    of crashing the flush, with per-operator-identical results."""
+    from repro.core.cost_model import PAPER_BHJ, RegressionModel
+
+    def scalar_only_oom(ss, cs):
+        return bool(ss > 0.7 * cs and cs < 64)    # ValueError on arrays
+
+    models = {"SMJ": RegressionModel("SMJ", PAPER_BHJ * 0 + 1.0),
+              "BHJ": RegressionModel("BHJ", PAPER_BHJ,
+                                     oom_fn=scalar_only_oom)}
+    kw = dict(models=models, cluster=paper_cluster(20, 8),
+              resource_planning="batched")
+    seq = OperatorCosting(**kw)
+    brk = OperatorCosting(broker=PlanBroker("numpy"), **kw)
+    ops = [("BHJ", 2.0, 74.0), ("BHJ", 3.0, 50.0)]
+    for op in ops:
+        brk.prefetch(*op)
+    assert [brk.plan_resources(*op) for op in ops] == \
+        [seq.plan_resources(*op) for op in ops]
+
+
+# --------------------------- cache counters -------------------------------- #
+
+def test_cache_counters_per_model_and_kind():
+    cache = ResourcePlanCache("exact")
+    stats = PlanningStats()
+    cache.lookup("SMJ", "join:time:ls6", 2.0, stats=stats)      # miss
+    cache.insert("SMJ", "join:time:ls6", 2.0, (10, 4), stats=stats)
+    cache.lookup("SMJ", "join:time:ls6", 2.0, stats=stats)      # hit
+    cache.lookup("BHJ", "join:time:ls6", 2.0, stats=stats)      # miss
+    snap = cache.counters_snapshot()
+    assert snap["SMJ|join:time:ls6"] == \
+        {"hits": 1, "misses": 1, "inserts": 1}
+    assert snap["BHJ|join:time:ls6"] == \
+        {"hits": 0, "misses": 1, "inserts": 0}
+    assert stats.cache_hits == 1 and stats.cache_misses == 2
+    assert stats.cache_inserts == 1
+    assert stats.cache_detail["SMJ|join:time:ls6"]["inserts"] == 1
+    # merge() folds the detail dicts
+    other = PlanningStats()
+    other.merge(stats)
+    assert other.cache_detail == stats.cache_detail
+
+
+def test_broker_fronts_cache_with_counters():
+    cache = ResourcePlanCache("exact")
+    broker = PlanBroker("numpy")
+    c = _costing(broker=broker, cache=cache)
+    for _ in range(2):
+        c.begin_query()
+        for op in (("SMJ", 2.0, 74.0), ("BHJ", 1.0, 74.0)):
+            c.prefetch(*op)
+        c.plan_resources("SMJ", 2.0, 74.0)
+        c.plan_resources("BHJ", 1.0, 74.0)
+    snap = cache.counters_snapshot()
+    smj = snap["SMJ|join:time:ls6"]
+    assert smj["inserts"] == 1 and smj["hits"] >= 1   # 2nd query hits
