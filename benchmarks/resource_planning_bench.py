@@ -10,11 +10,14 @@ comparing:
     batched        vectorized full-grid scan via cost_grid (this repo's
                    batched costing backend)
 
-then compares the numpy and jax ``PlanBackend`` implementations — grid
-scan and multi-start ensemble climb — on both the paper grid and the
-§VII-C scalability grid (``scaled_cluster(100_000, 100)`` = 10M
+then compares the numpy, jax, and pallas ``PlanBackend`` implementations
+— grid scan and multi-start ensemble climb — on both the paper grid and
+the §VII-C scalability grid (``scaled_cluster(100_000, 100)`` = 10M
 configurations, intractable for the scalar path at ~10M Python calls per
-operator), and finally the ``multi_query`` section: the session planning
+operator), the ``pallas`` section: the fused scan+argmin kernel
+(repro.kernels.plan_scan) against the jitted jax chunk scan, single
+request and (Q, P)-stacked, with zero materialized ``(Q, chunk)`` cost
+matrix, and finally the ``multi_query`` section: the session planning
 broker (repro.core.plan_broker) planning a 32-operator / 8-query batch
 over the scaled grid against the per-operator jitted baseline (one
 program dispatch per request) — the broker dedups recurring operators
@@ -77,9 +80,10 @@ def _costing(cluster, mode: str, cache=None, objective: str = "time",
                            ensemble_starts=ENSEMBLE_STARTS)
 
 
-def _have_jax() -> bool:
-    from repro.core.planning_backend import have_jax
-    return have_jax()
+def _backends() -> List[str]:
+    """numpy + whatever accelerated backends construct on this host."""
+    from repro.core.planning_backend import have_backend
+    return ["numpy"] + [be for be in ("jax", "pallas") if have_backend(be)]
 
 
 def _time_plan_resources(costing: OperatorCosting,
@@ -198,7 +202,7 @@ def backend_table(quick: bool = False) -> Tuple[List[Row], dict]:
     rows: List[Row] = []
     out: dict = {"ensemble_starts": ENSEMBLE_STARTS,
                  "scaled_configs": scaled.grid_size()}
-    backends = ["numpy"] + (["jax"] if _have_jax() else [])
+    backends = _backends()
 
     t_2start, _ = _time_plan_resources(
         _costing(paper, "hillclimb_batched"), repeats)
@@ -230,10 +234,15 @@ def backend_table(quick: bool = False) -> Tuple[List[Row], dict]:
     # cross-backend argmin agreement is recorded, not asserted, inside
     # run() (a float32 near-tie must not abort the benchmarks/run.py
     # sweep); main() enforces it standalone
+    for be in backends[1:]:
+        out[be]["argmin_match"] = float(
+            configs[be]["scan"] == configs["numpy"]["scan"]
+            and configs[be]["scaled"] == configs["numpy"]["scaled"])
+        rows.append((f"resplan.backend.{be}.argmin_match",
+                     out[be]["argmin_match"],
+                     f"{be} argmins == numpy argmins (1 = agree)"))
     if "jax" in configs:
-        out["argmin_match"] = float(
-            configs["jax"]["scan"] == configs["numpy"]["scan"]
-            and configs["jax"]["scaled"] == configs["numpy"]["scaled"])
+        out["argmin_match"] = out["jax"]["argmin_match"]
         rows.append(("resplan.backend.argmin_match", out["argmin_match"],
                      "jax argmins == numpy argmins (1 = agree)"))
         out["scaled_jax_vs_numpy_x"] = \
@@ -248,6 +257,99 @@ def backend_table(quick: bool = False) -> Tuple[List[Row], dict]:
              out["ensemble_vs_2start_x"],
              "2-start batched climb / jax ensemble climb (target >= 2)"),
         ]
+    return rows, out
+
+
+def pallas_table(quick: bool, backends_out: dict) -> Tuple[List[Row], dict]:
+    """The fused-kernel section (repro.kernels.plan_scan): the pallas
+    scan+argmin kernel against the jitted jax chunk scan on the 10M-point
+    grid (the ROADMAP's last open kernel item) — single request and the
+    (Q, P)-stacked scan the broker's flush groups run, measured directly
+    on the backend primitives with interleaved best-of repeats.  The
+    pallas side materializes no (Q, chunk) cost matrix: each kernel
+    program reduces its own (block,) cost vector in VMEM."""
+    rows: List[Row] = []
+    out: dict = {}
+    if "pallas" not in backends_out or "jax" not in backends_out:
+        return rows, out
+    from repro.core.planning_backend import get_backend
+    cluster = scaled_cluster(1_000, 20) if quick \
+        else scaled_cluster(100_000, 100)
+    model = simulator_cost_models()["SMJ"]
+
+    def _fn_for(be):
+        def fn(cfgs, p, xp=be.xp):
+            return model.cost_grid(p[0], p[1], cfgs, xp=xp)
+        return fn
+
+    # single-request scan, measured head-to-head on the backend
+    # primitives with INTERLEAVED best-of repeats (back-to-back pairs
+    # cancel host-load drift that separate timing sections pick up)
+    params = [OPERATOR["ss"], OPERATOR["ls"]]
+    fns = {}
+    scan_t = {}
+    for be_name in ("jax", "pallas"):
+        be = get_backend(be_name)
+        fns[be_name] = _fn_for(be)
+        be.argmin_grid(fns[be_name], cluster, params=params)  # warm-up
+        scan_t[be_name] = math.inf
+    for _ in range(3 if quick else 7):
+        for be_name in ("jax", "pallas"):
+            t0 = time.perf_counter()
+            get_backend(be_name).argmin_grid(fns[be_name], cluster,
+                                             params=params)
+            scan_t[be_name] = min(scan_t[be_name],
+                                  time.perf_counter() - t0)
+    out["jax_scan_s"] = scan_t["jax"]
+    out["pallas_scan_s"] = scan_t["pallas"]
+    out["vs_jax_scan_x"] = scan_t["jax"] / scan_t["pallas"]
+    out["argmin_match"] = backends_out["pallas"]["argmin_match"]
+    rows += [
+        ("resplan.pallas.jax_scan_s", out["jax_scan_s"],
+         f"jitted jax chunk scan, {cluster.grid_size():,}-point grid"),
+        ("resplan.pallas.pallas_scan_s", out["pallas_scan_s"],
+         f"fused pallas scan+argmin kernel, {cluster.grid_size():,}-point "
+         "grid"),
+        ("resplan.pallas.vs_jax_scan_x", out["vs_jax_scan_x"],
+         f"jitted jax chunk scan / fused pallas kernel, "
+         f"{cluster.grid_size():,}-point grid (target >= 1; gated on "
+         "the full grid only — dispatch overhead dominates the tiny "
+         "--quick grid)"),
+        ("resplan.pallas.argmin_match", out["argmin_match"],
+         "pallas argmins == numpy argmins (1 = agree)"),
+    ]
+
+    # (Q, P)-stacked scan: one fn, Q per-request (ss, ls) params — the
+    # broker flush-group shape, run straight on the backend primitives
+    pm = [[0.5 + 0.75 * i, 50.0 + 12.0 * i] for i in range(8)]
+    out["many_q"] = len(pm)
+    plans = {}
+    many_t = {}
+    for be_name in ("jax", "pallas"):
+        be = get_backend(be_name)
+        be.argmin_grid_many(fns[be_name], cluster, pm)  # compile warm-up
+        many_t[be_name] = math.inf
+    for _ in range(2 if quick else 3):
+        for be_name in ("jax", "pallas"):               # interleaved
+            t0 = time.perf_counter()
+            plans[be_name] = get_backend(be_name).argmin_grid_many(
+                fns[be_name], cluster, pm)
+            many_t[be_name] = min(many_t[be_name],
+                                  time.perf_counter() - t0)
+    for be_name in ("jax", "pallas"):
+        out[f"{be_name}_many_s"] = many_t[be_name]
+        rows.append((f"resplan.pallas.{be_name}_many_s", many_t[be_name],
+                     f"{len(pm)}-request stacked scan, "
+                     f"{cluster.grid_size():,}-point grid"))
+    out["many_vs_jax_x"] = out["jax_many_s"] / out["pallas_many_s"]
+    out["many_match"] = float([p[0] for p in plans["pallas"]]
+                              == [p[0] for p in plans["jax"]])
+    rows += [
+        ("resplan.pallas.many_vs_jax_x", out["many_vs_jax_x"],
+         "jax vmapped stacked scan / pallas (query, block)-grid kernel"),
+        ("resplan.pallas.many_match", out["many_match"],
+         "stacked pallas argmins == stacked jax argmins (1 = agree)"),
+    ]
     return rows, out
 
 
@@ -301,7 +403,7 @@ def multi_query(quick: bool = False) -> Tuple[List[Row], dict]:
                                _grid_fn_cache=shared_fns)
 
     plans = {}
-    for be in ["numpy"] + (["jax"] if _have_jax() else []):
+    for be in _backends():
         # warm-up + best-of timed repeats so jit compile time (paid once
         # per session fleet) is amortized out of the steady-state number
         repeats = 1 if be == "numpy" else (2 if quick else 3)
@@ -340,24 +442,26 @@ def multi_query(quick: bool = False) -> Tuple[List[Row], dict]:
     rows.append(("resplan.multi_query.numpy.identical",
                  out["numpy"]["identical"],
                  "numpy broker plans+costs == per-operator (1 = identical)"))
-    if ("jax", "broker") in plans:
-        # the broker-parity property: stacked jax search == per-operator
-        # jax search (same float32 arithmetic, vmapped vs sequential)
-        out["jax"]["broker_match"] = float(
-            [p[0] for p in plans["jax", "broker"]]
-            == [p[0] for p in plans["jax", "per_op"]])
+    for be in _backends()[1:]:
+        if (be, "broker") not in plans:
+            continue
+        # the broker-parity property: stacked search == per-operator
+        # search (same float32 arithmetic, stacked vs sequential)
+        out[be]["broker_match"] = float(
+            [p[0] for p in plans[be, "broker"]]
+            == [p[0] for p in plans[be, "per_op"]])
         # informational: float32 near-ties vs float64 can break either
         # way on a 10M-point grid (the planners re-commit through f64)
-        out["jax"]["argmin_match"] = float(
-            [p[0] for p in plans["jax", "broker"]]
+        out[be]["argmin_match"] = float(
+            [p[0] for p in plans[be, "broker"]]
             == [p[0] for p in plans["numpy", "per_op"]])
         rows += [
-            ("resplan.multi_query.jax.broker_match",
-             out["jax"]["broker_match"],
-             "jax broker argmins == jax per-operator (1 = agree)"),
-            ("resplan.multi_query.jax.argmin_match",
-             out["jax"]["argmin_match"],
-             "jax broker argmins == numpy per-operator (1 = agree)"),
+            (f"resplan.multi_query.{be}.broker_match",
+             out[be]["broker_match"],
+             f"{be} broker argmins == {be} per-operator (1 = agree)"),
+            (f"resplan.multi_query.{be}.argmin_match",
+             out[be]["argmin_match"],
+             f"{be} broker argmins == numpy per-operator (1 = agree)"),
         ]
 
     # cache-fronted broker: the dedup win measured by the per-(model,
@@ -381,16 +485,17 @@ def run(quick: bool = False) -> List[Row]:
     rows1, tab = overhead_table()
     rows2, scale = scalability(quick)
     rows3, backends = backend_table(quick)
+    rows5, pallas = pallas_table(quick, backends)
     rows4, mq = multi_query(quick)
     if quick:
         # CI smoke: shrunken grids must not overwrite the tracked JSON or
         # pollute the cross-PR history trend with incomparable numbers
-        return rows1 + rows2 + rows3 + rows4
+        return rows1 + rows2 + rows3 + rows5 + rows4
     out = Path(__file__).resolve().parent.parent / \
         "BENCH_resource_planning.json"
     payload = {"operator": OPERATOR, "paper_cluster_100x10": tab,
                "scaled_cluster_100000x100": scale, "backends": backends,
-               "multi_query": mq}
+               "pallas": pallas, "multi_query": mq}
     # append this run's summary to the cross-PR trajectory (--report mode
     # of benchmarks/run.py renders the trend)
     history = []
@@ -405,16 +510,20 @@ def run(quick: bool = False) -> List[Row]:
         "scaled_batched_s": scale["batched_s"],
         "scaled_configs": scale["configs"],
     }
-    for be in ("numpy", "jax"):
+    for be in ("numpy", "jax", "pallas"):
         if be in backends:
             snapshot[f"{be}_scaled_scan_s"] = backends[be]["scaled_scan_s"]
             snapshot[f"{be}_ensemble_us"] = backends[be]["ensemble_us"]
         if be in mq:
             snapshot[f"mq_{be}_broker_s"] = mq[be]["broker_s"]
             snapshot[f"mq_{be}_speedup_x"] = mq[be]["speedup_x"]
+    for k in ("vs_jax_scan_x", "many_vs_jax_x", "pallas_many_s"):
+        if k in pallas:
+            snapshot[f"pallas_{k}" if not k.startswith("pallas") else k] = \
+                pallas[k]
     payload["history"] = history + [snapshot]
     out.write_text(json.dumps(payload, indent=1) + "\n")
-    return rows1 + rows2 + rows3 + rows4
+    return rows1 + rows2 + rows3 + rows5 + rows4
 
 
 def main() -> None:
@@ -448,6 +557,18 @@ def main() -> None:
             f"jax scaled-grid scan must at least match numpy, got {jx:.2f}x"
         assert ex >= 2.0, \
             f"ensemble climb must beat the 2-start climb >= 2x, got {ex:.2f}x"
+    if "resplan.pallas.vs_jax_scan_x" in by_name:
+        px = by_name["resplan.pallas.vs_jax_scan_x"]
+        assert px >= 1.0, \
+            f"fused pallas scan must at least match the jitted jax scan " \
+            f"on the 10M-point grid, got {px:.2f}x"
+        if by_name["resplan.pallas.argmin_match"] != 1.0:
+            print("WARNING: pallas and numpy argmins diverged "
+                  "(fp near-tie)")
+        if by_name.get("resplan.multi_query.pallas.broker_match",
+                       1.0) != 1.0:
+            print("WARNING: pallas broker and per-operator argmins "
+                  "diverged")
     ident = by_name["resplan.multi_query.numpy.identical"]
     assert ident == 1.0, \
         "numpy broker must be bit-identical with the per-operator loop"

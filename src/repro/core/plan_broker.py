@@ -30,7 +30,10 @@ machinery:
    every start of every request climbing in one vmapped jitted
    ``while_loop``).  On the numpy backend the stacked arithmetic is
    bit-identical with Q independent per-operator searches (argmin ties
-   included); on jax the whole group is one fused program dispatch.
+   included); on jax the whole group is one fused program dispatch; on
+   ``"pallas"`` the group runs on the fused scan+argmin kernel
+   (repro.kernels.plan_scan) as a 2-D grid over (query, block) — zero
+   materialized ``(Q, chunk)`` cost matrix.
 
 3. **Commit / fan-out.**  Each winner is re-evaluated through the
    caller's scalar float64 cost fn before being fanned back to the

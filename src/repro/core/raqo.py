@@ -67,7 +67,8 @@ class RAQO:
     resource_planning: str = "hillclimb"
     cache: Optional[ResourcePlanCache] = None
     seed: int = 0
-    # array-search backend (planning_backend): None/"numpy" | "jax" | "auto"
+    # array-search backend (planning_backend):
+    # None/"numpy" | "jax" | "jax_x64" | "pallas" | "auto"
     backend: Union[str, PlanBackend, None] = None
     # session planning broker shared by every costing this RAQO creates;
     # plan_queries constructs one on demand when unset

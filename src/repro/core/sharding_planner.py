@@ -130,7 +130,8 @@ class ShardingPlanner:
     resource_planning: str = "hillclimb"
     cache: Optional[ResourcePlanCache] = None
     objective: str = "time"                    # time | chip_seconds
-    backend: Union[str, PlanBackend, None] = "numpy"   # numpy | jax | auto
+    # numpy | jax | jax_x64 | pallas | auto
+    backend: Union[str, PlanBackend, None] = "numpy"
     ensemble_starts: int = 24                  # random starts for "ensemble"
     seed: int = 0
     # session planning broker shared with other planners (DB and TPU

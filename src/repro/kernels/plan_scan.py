@@ -1,0 +1,657 @@
+"""Fused cost-scan + argmin Pallas kernels: resource planning as ONE
+streaming reduction, and the ``PallasPlanBackend`` that wraps them.
+
+The array backends (planning_backend) made the §VI-B1 exhaustive scan a
+chunked array program, but every chunk still *materializes* its cost
+vector (and the broker's stacked path a ``(Q, chunk)`` cost matrix) in
+main memory before a separate argmin pass reads it back — the last
+memory-bound wall in the 10M-config ``scaled_cluster(100_000, 100)``
+scan (ROADMAP open item).  The kernels here break it by fusing the three
+stages of the scan into one Pallas program per grid block:
+
+    decode     flat row ids -> configuration values, *in-kernel* (affine
+               dims by arithmetic, explicit-value dims by compare-select
+               over the small value table) — the config array is never
+               materialized in HBM, let alone the cost vector
+    cost       the caller's batch cost surface ``fn(configs, params)``
+               evaluated on the VMEM-resident block (the same traceable
+               fn the jax backend jits; infeasible/OOM configs cost inf
+               and are masked in-kernel)
+    reduce     a streaming argmin: the running ``(best_cost, best_idx)``
+               pair is carried across grid blocks in the revisited output
+               block (TPU grids iterate sequentially, so the accumulator
+               stays VMEM-resident), with strict-``<`` updates in
+               ascending block order so ties break to the *first* minimum
+               in ``enumerate_configs`` order — the scalar loop's
+               tie-breaking contract, preserved bit-for-bit
+
+Two scan kernels:
+
+* ``_scan_kernel`` — one request as a 1-D grid over config blocks, or Q
+  stacked requests as a 2-D grid over ``(query, block)``: params are
+  blocked per query row, the block axis is minor, and each program
+  reduces its own ``(block,)`` cost vector, so the broker's stacked
+  flush runs with ZERO materialized ``(Q, chunk)`` cost matrix (the jax
+  backend's vmap builds one per chunk).
+* ``_scan_many_unrolled_kernel`` — the same stacked scan with the query
+  axis unrolled *inside* the block body (config decode shared across all
+  Q lanes).  This is the interpret-mode variant: Pallas interpret lowers
+  multi-step grids to an XLA loop that executes serially, so the CPU
+  path instead bakes one single-block executable per chunk (static
+  ``lo0``), dispatches them async, and folds the per-chunk winners with
+  ONE host sync — distinct executables run concurrently on XLA:CPU,
+  which is what makes the interpret scan *faster* than the jitted jax
+  chunk loop and its per-chunk syncs.
+
+plus ``_neighbor_kernel``, the ensemble-climb neighbor-costing step
+(§VI-B2): neighbor generation, bounds masking, batched costing of every
+±1 neighbor of every start, and the per-start best-neighbor argmin, all
+fused into one program per climb iteration.
+
+``PallasPlanBackend`` (``get_backend("pallas")``) wraps them behind the
+full ``PlanBackend`` protocol — ``argmin_grid``, ``argmin_grid_many``,
+``hill_climb_ensemble``, ``hill_climb_ensemble_many`` — reusing the jax
+backend's compiled-program memo (one trace per (cost-fn object, grid,
+geometry)).  On non-TPU hosts the kernels run in interpret mode, so
+correctness (and the CI backend matrix) is verifiable everywhere; on TPU
+the full grid is one ``pallas_call`` with the carried reduction.
+
+Numerics: compute is float32 (like ``get_backend("jax")``), so
+``exact = False`` and the planners' float64 commit/fallback applies; the
+parity suites pin argmin/tie-break identity on f32-exact cost surfaces.
+Flat row ids are int32: grids within one padded block of 2**31
+configurations fall back to the inherited jax path (the §VII-C 10M-point
+grid is ~200x below that).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cluster import ClusterConditions, PlanningStats
+from repro.core.planning_backend import (  # noqa: F401 (re-exported types)
+    DEFAULT_CHUNK, BatchCostFn, JaxPlanBackend, Result, _decode_flat,
+    _neighbor_offsets, _pad_even, grid_arrays, start_indices)
+
+# int32 flat row ids: grids within one (padded) block of 2**31 configs
+# take the jax fallback path so tail-block ids never wrap negative
+MAX_FLAT = 1 << 31
+# query lanes per unrolled interpret-mode program (bounds trace size)
+UNROLL_Q = 64
+
+
+# ----------------------------- in-kernel decode ----------------------------- #
+
+def _dim_meta(cluster: ClusterConditions) -> Tuple[Tuple, ...]:
+    """Static per-dimension decode recipe: ("affine", lo, step) for range
+    dims (value = lo + step * idx, pure arithmetic) or ("values", vals)
+    for explicit grids (compare-select over the small value table)."""
+    metas = []
+    for d in cluster.dims:
+        if d.values:
+            metas.append(("values", tuple(int(v) for v in d.values)))
+        else:
+            metas.append(("affine", int(d.lo), int(d.step)))
+    return tuple(metas)
+
+
+def _dim_sizes(cluster: ClusterConditions) -> Tuple[int, ...]:
+    return tuple(len(d.grid()) for d in cluster.dims)
+
+
+def _iota1(n: int):
+    """(n,) int32 iota — TPU requires >= 2-D generation."""
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).squeeze(-1)
+
+
+def _value_of_index(idx, meta):
+    """One dimension's (N,) grid indices -> (N,) int32 config values."""
+    if meta[0] == "affine":
+        _, lo, step = meta
+        return (lo + step * idx).astype(jnp.int32)
+    vals = meta[1]
+    col = jnp.full_like(idx, vals[0])
+    for k in range(1, len(vals)):
+        col = jnp.where(idx == k, vals[k], col)
+    return col
+
+
+def _decode_configs(flat, metas, sizes):
+    """(N,) int32 flat row ids -> (N, n_dims) int32 config values in
+    ``enumerate_configs`` order (row-major, first dim slowest), decoded
+    by a divmod chain from the fastest dim up."""
+    cols = [None] * len(sizes)
+    rem = flat
+    for d in range(len(sizes) - 1, -1, -1):
+        if d == 0:
+            idx = rem
+        else:
+            idx = rem % sizes[d]
+            rem = rem // sizes[d]
+        cols[d] = _value_of_index(idx, metas[d])
+    return jnp.stack(cols, axis=1)
+
+
+def _values_of_indices(idx2d, metas):
+    """(N, n_dims) grid indices -> (N, n_dims) int32 config values."""
+    return jnp.stack([_value_of_index(idx2d[:, d], metas[d])
+                      for d in range(len(metas))], axis=1)
+
+
+# --------------------------- closure hoisting ------------------------------- #
+# Pallas kernels cannot capture array constants (a cost fn closing over
+# device tables raises "captures constants ... pass them as inputs").
+# Tracing the batch cost fn to a jaxpr up front splits it into a pure
+# computation plus its hoisted array constants; the builders below feed
+# those constants to the kernel as extra (whole-array, VMEM-resident)
+# inputs and evaluate the jaxpr on the in-kernel block.  Cost fns built
+# from python/numpy scalars (every cost model in this repo) embed them as
+# jaxpr literals and hoist zero constants.
+
+def _split_cost_fn(fn: BatchCostFn, n_rows: int, n_dims: int,
+                   p_width: int, has_params: bool):
+    """-> (call(cfgs, p, const_vals) -> (n_rows,) costs, const_ins,
+    const_shapes)."""
+    from jax import core as jax_core
+    cfgs_ex = jax.ShapeDtypeStruct((n_rows, n_dims), jnp.int32)
+    p_ex = jax.ShapeDtypeStruct((p_width,), jnp.float32)
+    if has_params:
+        cj = jax.make_jaxpr(lambda c, p: fn(c, p))(cfgs_ex, p_ex)
+
+        def call(cfgs, p, const_vals):
+            out, = jax_core.eval_jaxpr(cj.jaxpr, const_vals, cfgs, p)
+            return out.astype(jnp.float32)
+    else:
+        cj = jax.make_jaxpr(lambda c: fn(c))(cfgs_ex)
+
+        def call(cfgs, p, const_vals):
+            out, = jax_core.eval_jaxpr(cj.jaxpr, const_vals, cfgs)
+            return out.astype(jnp.float32)
+    ins, shapes = [], []
+    for c in cj.consts:
+        arr = jnp.asarray(c)
+        shapes.append(arr.shape)
+        ins.append(arr.reshape((1,)) if arr.ndim == 0 else arr)
+    return call, ins, tuple(shapes)
+
+
+def _const_specs(const_ins):
+    """Whole-array BlockSpecs (constant, grid-arity-agnostic index map)
+    for hoisted consts."""
+    specs = []
+    for arr in const_ins:
+        nd = arr.ndim
+        specs.append(pl.BlockSpec(arr.shape,
+                                  (lambda n: lambda *_: (0,) * n)(nd)))
+    return specs
+
+
+def _const_values(const_refs, shapes):
+    return [r[...].reshape(s) for r, s in zip(const_refs, shapes)]
+
+
+# ------------------------------ scan kernels -------------------------------- #
+
+def _fold_block(costs, start, j32_of, cost_acc, idx_acc):
+    """Reduce one block's (block,) cost vector and fold it into the
+    carried accumulator refs: argmin first (first-minimum tie-breaking),
+    then a single dynamic gather of the winning cost (one reduction pass
+    instead of min+argmin), then a strict-< update — ascending block
+    order makes the carried winner the first global minimum in
+    ``enumerate_configs`` order."""
+    j = jnp.argmin(costs).astype(jnp.int32)
+    c = costs[j]
+    better = c < cost_acc[j32_of]
+    idx_acc[j32_of] = jnp.where(better, start + j, idx_acc[j32_of])
+    cost_acc[j32_of] = jnp.where(better, c, cost_acc[j32_of])
+
+
+def _scan_kernel(params_ref, *refs, cost, shapes, metas, sizes,
+                 total, block, lo0, masked, grid_axis):
+    """One grid block: cost rows [lo0 + b*block, +block) and fold them
+    into the carried (best_cost, best_idx) accumulator living in the
+    revisited (1, 1) output blocks.  ``lo0`` is static: the interpret
+    path bakes one executable per chunk so XLA:CPU runs chunks
+    concurrently; the TPU path runs lo0=0 with the full grid."""
+    const_refs, (cost_ref, idx_ref) = refs[:-2], refs[-2:]
+    b = pl.program_id(grid_axis)
+
+    @pl.when(b == 0)
+    def _init():
+        cost_ref[0, 0] = jnp.float32(jnp.inf)
+        idx_ref[0, 0] = jnp.int32(-1)
+
+    start = lo0 + b * block
+    flat = start + _iota1(block)
+    if masked:                              # tail block: rows past the grid
+        ok = flat < total
+        cfgs = _decode_configs(jnp.where(ok, flat, 0), metas, sizes)
+    else:
+        cfgs = _decode_configs(flat, metas, sizes)
+    costs = cost(cfgs, params_ref[0, :], _const_values(const_refs, shapes))
+    if masked:
+        costs = jnp.where(ok, costs, jnp.inf)
+    _fold_block(costs, start, (0, 0), cost_ref, idx_ref)
+
+
+def _scan_many_unrolled_kernel(params_ref, *refs, cost, shapes,
+                               metas, sizes, total, block, lo0, nq, masked):
+    """Q stacked requests with the query axis unrolled inside the block
+    body: the config block is decoded ONCE and shared by all Q cost
+    evaluations (the jax backend hoists enumeration out of its vmap the
+    same way).  Interpret-mode variant — every per-query cost op stays a
+    top-level (block,) op that XLA:CPU can multi-thread."""
+    const_refs, (cost_ref, idx_ref) = refs[:-2], refs[-2:]
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        for q in range(nq):
+            cost_ref[q] = jnp.float32(jnp.inf)
+            idx_ref[q] = jnp.int32(-1)
+
+    start = lo0 + b * block
+    flat = start + _iota1(block)
+    if masked:
+        ok = flat < total
+        cfgs = _decode_configs(jnp.where(ok, flat, 0), metas, sizes)
+    else:
+        cfgs = _decode_configs(flat, metas, sizes)
+    const_vals = _const_values(const_refs, shapes)
+    for q in range(nq):
+        costs = cost(cfgs, params_ref[q, :], const_vals)
+        if masked:
+            costs = jnp.where(ok, costs, jnp.inf)
+        _fold_block(costs, start, q, cost_ref, idx_ref)
+
+
+def _neighbor_kernel(cur_ref, params_ref, *refs, cost, shapes, metas,
+                     sizes_t, n_dims, n_starts):
+    """The ensemble-climb neighbor-costing step (Algorithm 1's inner
+    batch): cost the S current positions and all their 2*n_dims ±1
+    neighbors (ONE fused cost evaluation over S*(2D+1) rows), mask
+    out-of-grid steps to inf, and reduce each start's best neighbor
+    (first-minimum tie-breaking over the fixed ``_neighbor_offsets``
+    order) — one program per climb step."""
+    const_refs = refs[:-3]
+    center_ref, best_c_ref, best_j_ref = refs[-3:]
+    cur = cur_ref[...]                                     # (S, D) indices
+    p = params_ref[0, :]
+    # neighbors are built per (dim, ±1) slot from scalar literals (kernels
+    # cannot capture array constants), in exactly the _neighbor_offsets
+    # order the host-side move/tie-break logic assumes
+    groups = [cur]                                         # slot -1: centers
+    valids = []
+    for d in range(n_dims):
+        for delta in (-1, 1):
+            idx = cur[:, d] + delta
+            valids.append((idx >= 0) & (idx < sizes_t[d]))
+            safe = jnp.clip(idx, 0, sizes_t[d] - 1)
+            groups.append(jnp.stack(
+                [safe if dd == d else cur[:, dd]
+                 for dd in range(n_dims)], axis=1))
+    rows = jnp.concatenate(groups, axis=0)                 # ((2D+1)*S, D)
+    costs = cost(_values_of_indices(rows, metas), p,
+                 _const_values(const_refs, shapes))
+    center_ref[...] = costs[:n_starts]
+    # slot-major concat -> (S, 2D) with columns in _neighbor_offsets order
+    ncosts = costs[n_starts:].reshape(2 * n_dims, n_starts).T
+    ncosts = jnp.where(jnp.stack(valids, axis=1), ncosts, jnp.inf)
+    best_c_ref[...] = jnp.min(ncosts, axis=1)
+    best_j_ref[...] = jnp.argmin(ncosts, axis=1).astype(jnp.int32)
+
+
+# ------------------------------ call builders ------------------------------- #
+
+def build_scan(fn: BatchCostFn, cluster: ClusterConditions, *, block: int,
+               nb: int, nq: int, lo0: int, has_params: bool, p_width: int,
+               masked: bool, interpret: bool):
+    """Jitted fused scan ``scan(params) -> (costs, idx)`` over ``nb``
+    blocks starting at static flat row ``lo0``.
+
+    ``nq == 0``: one request, 1-D grid of ``nb`` blocks, (1, 1) outputs.
+    ``nq > 0``: Q stacked requests as a 2-D grid over (query, block) —
+    params blocked per query row, block axis minor so each row's carried
+    accumulator completes before the next row starts; (Q, 1) outputs.
+    No (Q, chunk) cost matrix exists anywhere: every program reduces its
+    own (block,) cost vector in VMEM."""
+    cost, const_ins, shapes = _split_cost_fn(
+        fn, block, cluster.n_dims, p_width, has_params or nq > 0)
+    many = nq > 0
+    kernel = functools.partial(
+        _scan_kernel, cost=cost, shapes=shapes, metas=_dim_meta(cluster),
+        sizes=_dim_sizes(cluster), total=cluster.grid_size(), block=block,
+        lo0=lo0, masked=masked, grid_axis=1 if many else 0)
+    if many:
+        p_spec = pl.BlockSpec((1, p_width), lambda q, b: (q, 0))
+        out_spec = pl.BlockSpec((1, 1), lambda q, b: (q, 0))
+    else:
+        p_spec = pl.BlockSpec((1, p_width), lambda b: (0, 0))
+        out_spec = pl.BlockSpec((1, 1), lambda b: (0, 0))
+    rows = max(1, nq)
+    call = pl.pallas_call(
+        kernel,
+        grid=(nq, nb) if many else (nb,),
+        in_specs=[p_spec] + _const_specs(const_ins),
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, 1), jnp.int32)],
+        interpret=interpret,
+    )
+    return jax.jit(lambda p: call(p, *const_ins))
+
+
+def build_scan_many_unrolled(fn: BatchCostFn, cluster: ClusterConditions, *,
+                             block: int, nb: int, nq: int, lo0: int,
+                             p_width: int, masked: bool, interpret: bool):
+    """Jitted stacked scan with the query axis unrolled in the body:
+    ``scan(params) -> ((Q,) costs, (Q,) idx)``."""
+    cost, const_ins, shapes = _split_cost_fn(
+        fn, block, cluster.n_dims, p_width, True)
+    kernel = functools.partial(
+        _scan_many_unrolled_kernel, cost=cost, shapes=shapes,
+        metas=_dim_meta(cluster), sizes=_dim_sizes(cluster),
+        total=cluster.grid_size(), block=block, lo0=lo0, nq=nq,
+        masked=masked)
+    call = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((nq, p_width), lambda b: (0, 0))]
+        + _const_specs(const_ins),
+        out_specs=[pl.BlockSpec((nq,), lambda b: (0,)),
+                   pl.BlockSpec((nq,), lambda b: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((nq,), jnp.float32),
+                   jax.ShapeDtypeStruct((nq,), jnp.int32)],
+        interpret=interpret,
+    )
+    return jax.jit(lambda p: call(p, *const_ins))
+
+
+def build_neighbor_step(fn: BatchCostFn, cluster: ClusterConditions, *,
+                        n_starts: int, has_params: bool, p_width: int,
+                        interpret: bool):
+    """Jitted ``step(cur_idx, params) -> (center, best_cost, best_j)``."""
+    n_dims = cluster.n_dims
+    n_rows = n_starts * (2 * n_dims + 1)
+    cost, const_ins, shapes = _split_cost_fn(
+        fn, n_rows, n_dims, p_width, has_params)
+    kernel = functools.partial(
+        _neighbor_kernel, cost=cost, shapes=shapes, metas=_dim_meta(cluster),
+        sizes_t=_dim_sizes(cluster), n_dims=n_dims, n_starts=n_starts)
+    call = pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec((n_starts, n_dims), lambda: (0, 0)),
+                  pl.BlockSpec((1, p_width), lambda: (0, 0))]
+        + _const_specs(const_ins),
+        out_specs=[pl.BlockSpec((n_starts,), lambda: (0,)),
+                   pl.BlockSpec((n_starts,), lambda: (0,)),
+                   pl.BlockSpec((n_starts,), lambda: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((n_starts,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_starts,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_starts,), jnp.int32)],
+        interpret=interpret,
+    )
+    return jax.jit(lambda cur, p: call(cur, p, *const_ins))
+
+
+# ------------------------------ the backend --------------------------------- #
+
+class PallasPlanBackend(JaxPlanBackend):
+    """``PlanBackend`` over the fused scan+argmin kernels.
+
+    Inherits the jax backend's compiled-program memo (keyed by cost-fn
+    object + grid + geometry, so recurring jobs trace once) and its
+    float32 numerics (``exact = False``: planners re-commit winners
+    through scalar float64, exactly as for ``get_backend("jax")``).
+
+    Geometry: on TPU one ``pallas_call`` covers the whole grid —
+    ``block`` rows per program (default 32K ≈ 1.5 MB of f32 temporaries,
+    comfortably inside the ~16 MB VMEM even for cost surfaces with a
+    dozen live intermediates), grid steps iterating sequentially with
+    the argmin accumulator carried in the revisited output block.  In
+    interpret mode (any non-TPU host) multi-step grids would lower to a
+    single-threaded XLA loop, so the wrapper instead dispatches one
+    single-block program per ``block``-row chunk (default 2M rows),
+    keeps every per-chunk result on device, and folds them with ONE host
+    sync — measurably faster than the jitted jax scan, which syncs once
+    per chunk.  ``many_variant`` selects the stacked-scan kernel: the
+    2-D (query, block) grid (TPU default) or the query-unrolled block
+    body (interpret default); "grid2d"/"unrolled" force one for tests.
+    """
+
+    def __init__(self, *, block: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 many_variant: str = "auto"):
+        super().__init__(precision="float32")
+        self.name = "pallas"
+        self.interpret = (jax.default_backend() != "tpu") \
+            if interpret is None else bool(interpret)
+        self.block = int(block) if block else \
+            ((1 << 21) if self.interpret else (1 << 15))
+        if many_variant not in ("auto", "grid2d", "unrolled"):
+            raise ValueError(f"unknown many_variant {many_variant!r}")
+        self.many_variant = many_variant
+
+    # -- helpers ------------------------------------------------------------- #
+
+    def _use_unrolled(self) -> bool:
+        if self.many_variant == "auto":
+            return self.interpret
+        return self.many_variant == "unrolled"
+
+    def _params32(self, params, p_width: int) -> jnp.ndarray:
+        p = np.zeros((1, p_width), dtype=np.float32)
+        if params is not None:
+            arr = np.asarray(params, dtype=np.float32).ravel()
+            p[0, :arr.size] = arr
+        return jnp.asarray(p)
+
+    @staticmethod
+    def _result(cluster: ClusterConditions, flat: int, cost: float) -> Result:
+        if flat < 0 or math.isinf(cost):
+            return None, math.inf
+        grids = grid_arrays(cluster)
+        shape = tuple(len(g) for g in grids)
+        return _decode_flat(grids, shape, flat), float(cost)
+
+    # -- fused grid scan ------------------------------------------------------ #
+
+    def argmin_grid(self, batch_cost_fn: BatchCostFn,
+                    cluster: ClusterConditions,
+                    stats: Optional[PlanningStats] = None, *,
+                    params=None, chunk_size: int = DEFAULT_CHUNK) -> Result:
+        """Exhaustive scan as the fused decode+cost+argmin kernel; first
+        strict minimum in ``enumerate_configs`` order, (None, inf) when
+        every configuration costs inf."""
+        stats = stats if stats is not None else PlanningStats()
+        total = cluster.grid_size()
+        if total == 0:
+            return None, math.inf
+        if total > MAX_FLAT - self.block:
+            # int32 row ids: the padded tail block reaches up to
+            # total + block - 1, which must not wrap negative
+            return super().argmin_grid(batch_cost_fn, cluster, stats,
+                                       params=params, chunk_size=chunk_size)
+        block = int(min(self.block, total))
+        has_params = params is not None
+        p_width = max(1, 0 if params is None else np.size(params))
+        p = self._params32(params, p_width)
+        stats.configs_explored += total
+
+        if self.interpret:
+            # one single-block executable per chunk, lo baked statically:
+            # distinct executables dispatch async and run CONCURRENTLY on
+            # XLA:CPU (a multi-step interpret grid would serialize), with
+            # one host sync folding the per-chunk winners at the end
+            outs = []
+            for lo in range(0, total, block):
+                tail = lo + block > total
+                prog = self._program(
+                    "pscan", batch_cost_fn, cluster,
+                    (block, 1, 0, lo, has_params, p_width, tail, True),
+                    lambda lo=lo, t=tail: build_scan(
+                        batch_cost_fn, cluster, block=block, nb=1, nq=0,
+                        lo0=lo, has_params=has_params, p_width=p_width,
+                        masked=t, interpret=True))
+                outs.append(prog(p))
+            costs = np.asarray(jnp.stack([c for c, _ in outs]))[:, 0, 0]
+            flats = np.asarray(jnp.stack([f for _, f in outs]))[:, 0, 0]
+            k = int(np.argmin(costs))         # first min: lowest-lo chunk
+            return self._result(cluster, int(flats[k]), float(costs[k]))
+
+        nb = -(-total // block)
+        prog = self._program(
+            "pscan", batch_cost_fn, cluster,
+            (block, nb, 0, 0, has_params, p_width, True, False),
+            lambda: build_scan(batch_cost_fn, cluster, block=block, nb=nb,
+                               nq=0, lo0=0, has_params=has_params,
+                               p_width=p_width, masked=True,
+                               interpret=False))
+        c, f = prog(p)
+        return self._result(cluster, int(f[0, 0]), float(c[0, 0]))
+
+    def argmin_grid_many(self, batch_cost_fn: BatchCostFn,
+                         cluster: ClusterConditions,
+                         params_many, *,
+                         stats: Optional[PlanningStats] = None,
+                         chunk_size: int = DEFAULT_CHUNK) -> List[Result]:
+        """Stacked scan for Q requests sharing one cost fn and grid —
+        the (Q, P) params form as a 2-D grid over (query, block) (or the
+        query-unrolled interpret variant); per-request results identical
+        to Q sequential ``argmin_grid`` calls.  Like the jax backend, Q
+        is padded to even (last row repeated, results sliced off), so a
+        session whose flush-group sizes fluctuate compiles half as many
+        distinct batch shapes at <= one wasted lane."""
+        stats = stats if stats is not None else PlanningStats()
+        pm = np.asarray(params_many, dtype=np.float64)
+        Q, P = pm.shape
+        if Q == 0:
+            return []
+        total = cluster.grid_size()
+        if total == 0:
+            return [(None, math.inf)] * Q
+        if total > MAX_FLAT - self.block:     # tail padding must not wrap
+            return super().argmin_grid_many(batch_cost_fn, cluster, pm,
+                                            stats=stats,
+                                            chunk_size=chunk_size)
+        if Q > UNROLL_Q and self._use_unrolled():
+            out = []
+            for lo in range(0, Q, UNROLL_Q):
+                out += self.argmin_grid_many(batch_cost_fn, cluster,
+                                             pm[lo:lo + UNROLL_Q],
+                                             stats=stats,
+                                             chunk_size=chunk_size)
+            return out
+        block = int(min(self.block, total))
+        p_width = max(1, P)
+        Qpad = _pad_even(Q)
+        pmp = np.pad(pm, ((0, Qpad - Q), (0, 0)), mode="edge")
+        p = jnp.asarray(pmp.astype(np.float32)) if P else \
+            jnp.zeros((Qpad, 1), dtype=jnp.float32)
+        stats.configs_explored += Q * total
+
+        if self._use_unrolled():
+            outs = []
+            for lo in range(0, total, block):
+                tail = lo + block > total
+                prog = self._program(
+                    "pscan_many_u", batch_cost_fn, cluster,
+                    (block, 1, Qpad, lo, p_width, tail, self.interpret),
+                    lambda lo=lo, t=tail: build_scan_many_unrolled(
+                        batch_cost_fn, cluster, block=block, nb=1,
+                        nq=Qpad, lo0=lo, p_width=p_width, masked=t,
+                        interpret=self.interpret))
+                outs.append(prog(p))
+            costs = np.asarray(jnp.stack([c for c, _ in outs]))[:, :Q]
+            flats = np.asarray(jnp.stack([f for _, f in outs]))[:, :Q]
+        else:
+            nb = -(-total // block)
+            prog = self._program(
+                "pscan_many", batch_cost_fn, cluster,
+                (block, nb, Qpad, 0, p_width, True, self.interpret),
+                lambda: build_scan(
+                    batch_cost_fn, cluster, block=block, nb=nb, nq=Qpad,
+                    lo0=0, has_params=True, p_width=p_width, masked=True,
+                    interpret=self.interpret))
+            c, f = prog(p)
+            costs = np.asarray(c).reshape(1, Qpad)[:, :Q]
+            flats = np.asarray(f).reshape(1, Qpad)[:, :Q]
+        k = np.argmin(costs, axis=0)          # first min: lowest-lo chunk
+        return [self._result(cluster, int(flats[k[q], q]),
+                             float(costs[k[q], q])) for q in range(Q)]
+
+    # -- ensemble climb on the fused neighbor step ---------------------------- #
+
+    def hill_climb_ensemble(self, batch_cost_fn: BatchCostFn,
+                            cluster: ClusterConditions,
+                            starts: Optional[Sequence[Sequence[int]]] = None,
+                            stats: Optional[PlanningStats] = None, *,
+                            params=None, n_random: int = 0, seed: int = 0,
+                            max_iters: int = 100_000) -> Result:
+        """Multi-start steepest descent with the per-iteration neighbor
+        batch (generation, masking, costing, per-start argmin) fused into
+        one kernel call; moves and termination mirror the numpy backend,
+        so trajectories are identical on f32-exact cost surfaces."""
+        stats = stats if stats is not None else PlanningStats()
+        grids_np = grid_arrays(cluster)
+        n_dims = len(grids_np)
+        sizes = np.asarray([len(g) for g in grids_np], dtype=np.int64)
+        cur = np.asarray(start_indices(cluster, starts, n_random, seed))
+        S = len(cur)
+        offs = _neighbor_offsets(n_dims)
+        has_params = params is not None
+        p_width = max(1, 0 if params is None else np.size(params))
+        p = self._params32(params, p_width)
+        prog = self._program(
+            "pnbr", batch_cost_fn, cluster,
+            (S, has_params, p_width, self.interpret),
+            lambda: build_neighbor_step(
+                batch_cost_fn, cluster, n_starts=S, has_params=has_params,
+                p_width=p_width, interpret=self.interpret))
+
+        cur_cost = np.full(S, np.inf)
+        for it in range(max_iters):
+            center, best_c, best_j = prog(jnp.asarray(cur, dtype=jnp.int32),
+                                          p)
+            center = np.asarray(center, dtype=np.float64)
+            best_c = np.asarray(best_c, dtype=np.float64)
+            best_j = np.asarray(best_j)
+            nbr = cur[:, None, :] + offs[None, :, :]
+            valid = ((nbr >= 0) & (nbr < sizes)).all(-1)
+            stats.configs_explored += S + int(valid.sum())
+            cur_cost = center
+            improved = best_c < center        # strict <: Algorithm 1 stop
+            if not improved.any():
+                break
+            step = np.take_along_axis(
+                nbr, best_j[:, None, None], 1)[:, 0, :]
+            cur[improved] = step[improved]
+            cur_cost[improved] = best_c[improved]
+
+        i = int(np.argmin(cur_cost))
+        res = tuple(int(grids_np[d][cur[i, d]]) for d in range(n_dims))
+        return res, float(cur_cost[i])
+
+    def hill_climb_ensemble_many(self, batch_cost_fn: BatchCostFn,
+                                 cluster: ClusterConditions,
+                                 params_many, *,
+                                 starts=None,
+                                 stats: Optional[PlanningStats] = None,
+                                 n_random: int = 0, seed: int = 0,
+                                 max_iters: int = 100_000) -> List[Result]:
+        """Q climbs sharing one fn/grid/start set: the per-request climb
+        runs once per request (the neighbor-step program is traced once
+        and reused across all Q), trivially identical to the per-request
+        path."""
+        pm = np.asarray(params_many, dtype=np.float64)
+        return [self.hill_climb_ensemble(
+            batch_cost_fn, cluster, starts, stats, params=pm[q],
+            n_random=n_random, seed=seed, max_iters=max_iters)
+            for q in range(pm.shape[0])]

@@ -348,6 +348,23 @@ def test_scalar_only_oom_predicate_survives_stacked_path():
         [seq.plan_resources(*op) for op in ops]
 
 
+# ------------------- CI backend-matrix lane (conftest fixture) -------------- #
+
+def test_env_backend_lane_broker_identical_with_sequential(
+        plan_backend_name, plan_backend):
+    """This suite's broker-vs-sequential parity, retargeted at the CI
+    matrix lane's backend (the ``plan_backend`` fixture skips the test
+    when the lane needs jax and it is absent)."""
+    for mode in ("batched", "ensemble"):
+        seq = _costing(mode=mode, backend=plan_backend_name)
+        brk = _costing(mode=mode, broker=PlanBroker(plan_backend_name))
+        ops = [("SMJ", 2.0, 74.0), ("BHJ", 1.0, 74.0), ("SMJ", 4.0, 120.0)]
+        for op in ops:
+            brk.prefetch(*op)
+        assert [brk.plan_resources(*op) for op in ops] == \
+            [seq.plan_resources(*op) for op in ops]
+
+
 # --------------------------- cache counters -------------------------------- #
 
 def test_cache_counters_per_model_and_kind():

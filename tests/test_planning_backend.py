@@ -315,6 +315,31 @@ def test_operator_costing_jax_reuses_compiled_program():
     assert c._grid_fn_cache.get(("SMJ", "time", "jax")) is fn1
 
 
+# ------------------- CI backend-matrix lane (conftest fixture) -------------- #
+
+def test_env_backend_lane_matches_numpy(plan_backend):
+    """This suite's random-grid parity (exhaustive scan + ensemble
+    climb), retargeted at whatever backend the CI matrix lane selected
+    via REPRO_PLAN_BACKEND (the numpy lane degenerates to oracle ==
+    oracle; integer tables keep f32 lanes exact)."""
+    rng = np.random.default_rng(7)
+    xp = plan_backend.xp
+    for ragged in (False, True):
+        cluster = _random_cluster(rng, 9, 7, ragged)
+        table = _random_table(rng, 9, 7)
+        r_np, c_np = get_backend("numpy").argmin_grid(
+            _table_fn(cluster, table, np), cluster)
+        r_e, c_e = plan_backend.argmin_grid(
+            _table_fn(cluster, table, xp), cluster)
+        assert r_e == r_np
+        assert (c_e == c_np) or (math.isinf(c_e) and math.isinf(c_np))
+        e_np = get_backend("numpy").hill_climb_ensemble(
+            _table_fn(cluster, table, np), cluster, n_random=6, seed=3)
+        e_env = plan_backend.hill_climb_ensemble(
+            _table_fn(cluster, table, xp), cluster, n_random=6, seed=3)
+        assert e_env[0] == e_np[0] and e_env[1] == e_np[1]
+
+
 def test_operator_costing_ensemble_never_worse_than_2start():
     cluster = paper_cluster(100, 10)
     kw = dict(models=simulator_cost_models(), cluster=cluster)
