@@ -34,6 +34,41 @@ def _flatten(prefix: str, obj, rows: list) -> None:
         rows.append((prefix, float(obj)))
 
 
+def _lint_summary(sources: list) -> dict:
+    """plan-lint rule/severity counts + compile-count table hash for the
+    report.  Prefers the CI artifact (artifacts/plan_lint.json, written
+    by ``python -m repro.analysis --json``); falls back to the last
+    snapshot in the tracked BENCH_plan_lint.json history."""
+    artifact = ROOT / "artifacts" / "plan_lint.json"
+    if artifact.exists():
+        try:
+            data = json.loads(artifact.read_text())
+            s = data.get("summary", {})
+            sources.append("artifacts/plan_lint.json")
+            return {"source": "artifacts/plan_lint.json",
+                    "by_severity": s.get("by_severity", {}),
+                    "by_rule": s.get("by_rule", {}),
+                    "allowed": s.get("allowed", 0),
+                    "table_hash": data.get("table_hash")}
+        except (json.JSONDecodeError, TypeError):
+            pass
+    tracked = ROOT / "BENCH_plan_lint.json"
+    if tracked.exists():
+        try:
+            data = json.loads(tracked.read_text())
+            hist = data.get("history") or [{}]
+            snap = hist[-1]
+            return {"source": "BENCH_plan_lint.json (last snapshot)",
+                    "by_severity": {k: snap[k] for k in
+                                    ("info", "warn", "error") if k in snap},
+                    "by_rule": {},
+                    "allowed": snap.get("allowed", 0),
+                    "table_hash": data.get("table_hash")}
+        except (json.JSONDecodeError, TypeError, IndexError):
+            pass
+    return {}
+
+
 def report() -> None:
     """Merge BENCH_*.json + artifacts/bench_results.json into one
     markdown/JSON trend table (the cross-PR perf trajectory)."""
@@ -54,7 +89,7 @@ def report() -> None:
                            if isinstance(v, (int, float))
                            and not isinstance(v, bool)})
             trends[f.stem] = {
-                "runs": [snap.get("ts", f"run{i}")
+                "runs": [str(snap.get("ts", f"run{i}"))
                          for i, snap in enumerate(history)],
                 "series": {k: [snap.get(k) for snap in history]
                            for k in keys},
@@ -74,10 +109,13 @@ def report() -> None:
         except (json.JSONDecodeError, TypeError, KeyError):
             pass
 
+    lint = _lint_summary(sources)
+
     payload = {"generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
                "sources": sources,
                "metrics": [{"name": n, "value": v} for n, v in metrics],
-               "trends": trends}
+               "trends": trends,
+               "plan_lint": lint}
     out_dir = ROOT / "artifacts"
     out_dir.mkdir(exist_ok=True)
     (out_dir / "bench_report.json").write_text(
@@ -96,6 +134,15 @@ def report() -> None:
             cells = " | ".join("" if v is None else f"{v:.6g}"
                                for v in series)
             md.append(f"| {k} | {cells} |")
+    if lint:
+        md += ["", "## plan-lint", "",
+               f"Source: {lint['source']}  —  compile-count table hash "
+               f"`{lint.get('table_hash') or 'n/a'}`", "",
+               "| severity / rule | count |", "|---|---|"]
+        md += [f"| {k} | {v:g} |"
+               for k, v in sorted(lint["by_severity"].items())]
+        md += [f"| {k} | {v:g} |" for k, v in sorted(lint["by_rule"].items())]
+        md += [f"| allowed (pragma) | {lint['allowed']:g} |"]
     (out_dir / "bench_report.md").write_text("\n".join(md) + "\n")
     print(f"wrote {out_dir / 'bench_report.json'} and .md "
           f"({len(metrics)} metrics, {len(trends)} trend series)")

@@ -1,0 +1,17 @@
+"""plan-lint: static analysis that certifies the planning stack's
+backend parity, dtype, and recompile contracts (see README.md here).
+
+Only the dependency-free registration surface is exported eagerly —
+importing ``repro.analysis`` must stay free for the core modules that
+decorate hot paths and register cost surfaces at import time.  The lint
+passes themselves (``jaxpr_lint``, ``recompile_audit``,
+``hotpath_lint``) import jax / repro.core and are loaded on demand by
+the CLI (``python -m repro.analysis``) or by explicit submodule import.
+"""
+from repro.analysis.registry import (CostSurface, hot_path,
+                                     iter_cost_surfaces,
+                                     register_cost_surface, surface_names)
+from repro.analysis.report import Finding
+
+__all__ = ["CostSurface", "Finding", "hot_path", "iter_cost_surfaces",
+           "register_cost_surface", "surface_names"]

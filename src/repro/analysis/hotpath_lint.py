@@ -1,0 +1,163 @@
+"""Pass 3 — AST host-sync lint over designated hot paths.
+
+Hot paths are functions decorated ``@hot_path("reason")``
+(``repro.analysis.registry``): the broker flush machinery, the jitted
+backends' per-request scan/climb drivers, and the Pallas kernel
+builders.  Inside them — including nested ``def``s — the following calls
+force a device->host synchronization and are flagged:
+
+    float(x)            .item()             np.asarray(x)
+    jax.device_get(x)   x.block_until_ready()
+
+rule ``host-sync``
+    * **warn** when the call sits inside a ``for``/``while`` loop of the
+      hot function: a sync per chunk/iteration serializes the async
+      dispatch pipeline (the exact bug class the single-sync
+      ``argmin_grid_many`` rewrite removed).
+    * **info** at loop depth zero: one deliberate sync per call is the
+      documented pattern (fold once at the end); it stays visible in the
+      report without failing ``--fail-on warn``.
+
+Suppressions use the inline pragma — ``# plan-lint:`` then
+``allow(host-sync): reason`` — on the offending line or the line above;
+a pragma without a reason is a ``pragma-no-reason`` warning (report.py).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+from repro.analysis.report import (Finding, apply_pragmas, pragma_findings)
+
+SYNC_ATTRS = {"item", "block_until_ready", "device_get"}
+NP_MODULE_NAMES = {"np", "numpy"}
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_TREE = _REPO_ROOT / "src" / "repro"
+
+
+def _is_hot_decorator(dec: ast.expr) -> bool:
+    """``@hot_path("...")`` — possibly attribute-qualified."""
+    if isinstance(dec, ast.Call):
+        dec = dec.func
+    if isinstance(dec, ast.Name):
+        return dec.id == "hot_path"
+    if isinstance(dec, ast.Attribute):
+        return dec.attr == "hot_path"
+    return False
+
+
+def _sync_call(node: ast.Call) -> str:
+    """Non-empty description when the call is a known host sync."""
+    fn = node.func
+    if isinstance(fn, ast.Name) and fn.id == "float":
+        return "float() on a device value"
+    if isinstance(fn, ast.Attribute):
+        if fn.attr == "asarray" and isinstance(fn.value, ast.Name) \
+                and fn.value.id in NP_MODULE_NAMES:
+            return "np.asarray() materializes on host"
+        if fn.attr == "item":
+            return ".item() pulls a scalar to host"
+        if fn.attr == "block_until_ready":
+            return ".block_until_ready() blocks on the device"
+        if fn.attr == "device_get":
+            return "jax.device_get() transfers to host"
+    return ""
+
+
+class _HotFnVisitor(ast.NodeVisitor):
+    """Walk one hot function (nested defs included), tracking loop depth."""
+
+    def __init__(self, path: str, qualname: str, reason: str):
+        self.path = path
+        self.qualname = qualname
+        self.reason = reason
+        self.loop_depth = 0
+        self.findings: List[Finding] = []
+
+    def _loop(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = visit_While = visit_AsyncFor = _loop
+
+    def visit_Call(self, node: ast.Call):
+        desc = _sync_call(node)
+        if desc:
+            in_loop = self.loop_depth > 0
+            self.findings.append(Finding(
+                rule="host-sync",
+                severity="warn" if in_loop else "info",
+                path=self.path, line=node.lineno, obj=self.qualname,
+                message=desc + (
+                    " inside a loop of a hot path — one sync per "
+                    "iteration serializes the async dispatch pipeline"
+                    if in_loop else
+                    " in a hot path (single deliberate sync)")))
+        self.generic_visit(node)
+
+
+def _iter_hot_functions(tree: ast.Module
+                        ) -> Iterator[Tuple[ast.AST, str, str]]:
+    """(function node, qualname, reason) for every @hot_path def."""
+    stack: List[Tuple[ast.AST, str]] = [(tree, "")]
+    while stack:
+        node, prefix = stack.pop()
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                hot = [d for d in child.decorator_list
+                       if _is_hot_decorator(d)]
+                if hot:
+                    reason = ""
+                    d = hot[0]
+                    if isinstance(d, ast.Call) and d.args and \
+                            isinstance(d.args[0], ast.Constant):
+                        reason = str(d.args[0].value)
+                    yield child, qual, reason
+                else:
+                    # nested defs of a hot fn are covered by its visitor;
+                    # only recurse into *non*-hot scopes looking for more
+                    stack.append((child, qual + "."))
+            elif isinstance(child, ast.ClassDef):
+                stack.append((child, f"{prefix}{child.name}."))
+
+
+def lint_file(path: Path) -> List[Finding]:
+    """Hot-path host-sync findings (+ pragma hygiene) for one file,
+    with pragmas already applied."""
+    path = Path(path)
+    source = path.read_text()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(rule="host-sync", severity="error",
+                        path=_rel(path), line=e.lineno or 0, obj="<module>",
+                        message=f"file does not parse: {e.msg}")]
+    rel = _rel(path)
+    findings: List[Finding] = []
+    for fn_node, qual, reason in _iter_hot_functions(tree):
+        v = _HotFnVisitor(rel, qual, reason)
+        # visit the body (not the def itself, so decorators are skipped)
+        for stmt in fn_node.body:
+            v.visit(stmt)
+        findings.extend(v.findings)
+    findings.extend(pragma_findings(rel, source))
+    return apply_pragmas(findings, {rel: source})
+
+
+def lint_tree(root: Path = DEFAULT_TREE) -> List[Finding]:
+    out: List[Finding] = []
+    for path in sorted(Path(root).rglob("*.py")):
+        out.extend(lint_file(path))
+    return out
+
+
+def _rel(path: Path) -> str:
+    p = Path(path).resolve()
+    try:
+        return str(p.relative_to(_REPO_ROOT))
+    except ValueError:
+        return str(p)

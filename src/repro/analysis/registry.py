@@ -1,0 +1,87 @@
+"""plan-lint registration surface: the *only* analysis module the core
+planning stack imports.
+
+Two registries live here, both deliberately dependency-free (no jax, no
+repro.core imports) so that tagging a function as a hot path or
+registering a cost surface costs nothing at import time:
+
+* ``hot_path(reason)`` — a passthrough decorator marking a function as a
+  designated hot path for the AST host-sync lint
+  (``repro.analysis.hotpath_lint``).  The lint detects the decorator
+  *syntactically*, so decorated code pays zero runtime overhead; the
+  attributes set here exist so tests and tooling can also discover hot
+  paths at runtime.
+
+* ``register_cost_surface(surface)`` / ``iter_cost_surfaces()`` — the
+  corpus of DB/TPU cost surfaces the jaxpr contract lint
+  (``repro.analysis.jaxpr_lint``) traces and certifies.  A surface is
+  registered as a *lazy factory*: nothing is built (and jax is not
+  imported) until the lint actually runs.  ``cost_model.py`` registers
+  the paper/simulator join models, ``roofline.py`` the TPU terms_grid
+  surfaces; anything else reachable from ``get_backend`` should register
+  here too, or the parity/dtype/hoistability contracts are enforced for
+  it nowhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterator, List, Optional, Sequence
+
+HOT_PATH_ATTR = "__plan_lint_hot__"
+HOT_PATH_REASON_ATTR = "__plan_lint_hot_reason__"
+
+
+def hot_path(reason: str) -> Callable:
+    """Mark a function as a designated hot path (see module docstring).
+
+    ``reason`` documents *why* the path is hot (which loop dispatches it
+    per request/chunk/iteration) — it is required, so the registry reads
+    as an inventory rather than a bag of tags.
+    """
+    if not isinstance(reason, str) or not reason.strip():
+        raise ValueError("hot_path requires a non-empty reason string")
+
+    def mark(fn):
+        setattr(fn, HOT_PATH_ATTR, True)
+        setattr(fn, HOT_PATH_REASON_ATTR, reason)
+        return fn
+
+    return mark
+
+
+@dataclasses.dataclass(frozen=True)
+class CostSurface:
+    """One registered batch-cost surface for the jaxpr contract lint.
+
+    ``make_fn(xp)`` must return the param-style batch cost callable
+    ``fn(configs, params) -> costs`` over the given array namespace (the
+    same factory shape the planners use), ``make_cluster()`` the
+    ``ClusterConditions`` grid it searches, and ``params`` a
+    representative per-request scalar vector.  Everything is lazy so the
+    registry itself never imports jax or builds models.
+    """
+    name: str
+    domain: str                        # "db" | "tpu"
+    make_fn: Callable                  # (xp) -> fn(configs, params)
+    make_cluster: Callable             # () -> ClusterConditions
+    params: Sequence[float]
+
+
+_COST_SURFACES: Dict[str, CostSurface] = {}
+
+
+def register_cost_surface(surface: CostSurface) -> CostSurface:
+    """Register (or replace) a cost surface by name."""
+    _COST_SURFACES[surface.name] = surface
+    return surface
+
+
+def iter_cost_surfaces(domain: Optional[str] = None
+                       ) -> Iterator[CostSurface]:
+    for s in _COST_SURFACES.values():
+        if domain is None or s.domain == domain:
+            yield s
+
+
+def surface_names() -> List[str]:
+    return sorted(_COST_SURFACES)

@@ -290,3 +290,40 @@ def monetary_cost(exec_time_s: float, cs: float, nc: float,
                   dollars_per_gb_hour: float = 0.05) -> float:
     """Serverless billing (§III-C): pay for total container-GB-hours."""
     return exec_time_s / 3600.0 * cs * nc * dollars_per_gb_hour
+
+
+# --------------------------------------------------------------------------- #
+# plan-lint registration: expose the shipped DB cost surfaces to the static
+# analyzer (``python -m repro.analysis``).  Factories are lazy — nothing
+# here builds a model or imports jax until the lint traces a surface.
+# --------------------------------------------------------------------------- #
+
+def _register_lint_surfaces() -> None:
+    from repro.analysis.registry import CostSurface, register_cost_surface
+
+    def db_surface(name: str, make_model: Callable) -> None:
+        def make_fn(xp):
+            model = make_model()
+
+            def fn(configs, params):
+                # params = [ss, ls]: the per-request relation sizes, the
+                # same parameterization plans.py uses so degraded/recurring
+                # requests share one compiled search program
+                return model.cost_grid(params[0], params[1], configs, xp=xp)
+            return fn
+
+        def make_cluster():
+            from repro.core.cluster import paper_cluster
+            return paper_cluster()
+
+        register_cost_surface(CostSurface(
+            name=name, domain="db", make_fn=make_fn,
+            make_cluster=make_cluster, params=(2.0, 74.0)))
+
+    db_surface("db/paper/SMJ", lambda: paper_models()["SMJ"])
+    db_surface("db/paper/BHJ", lambda: paper_models()["BHJ"])
+    db_surface("db/sim/SMJ", lambda: simulator_cost_models()["SMJ"])
+    db_surface("db/sim/BHJ", lambda: simulator_cost_models()["BHJ"])
+
+
+_register_lint_surfaces()

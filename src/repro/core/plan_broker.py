@@ -45,16 +45,25 @@ machinery:
    ``scan_fallback`` is set.  Freshly searched feasible plans are
    inserted into the cache, so the next flush dedups against them.
 
-Semantics note: within one flush, cache lookups observe the cache as of
-flush entry — two requests with the *same* cache key still share one
-search (leader/follower), but a nearest-neighbor/weighted-average cache
-does not interpolate against entries inserted in the same flush the way
-a strictly sequential loop would.  With an ``exact``-mode cache (or no
-cache) broker results are bit-identical to the sequential per-operator
-loop; the property tests in tests/test_plan_broker.py pin this.  If a
-leader's search comes back infeasible (nothing insertable), its
-followers are re-planned one by one through the sequential semantics, so
-that corner matches the per-operator loop too.
+Semantics note: broker results are sequential-identical for *every*
+cache mode.  Exact-mode caches (and cache-less requests) resolve their
+lookups at flush entry — within-flush sharing is pure leader/follower
+dedup, bit-identical to the sequential loop.  Nearest-neighbor and
+weighted-average caches interpolate, so their lookups must observe
+entries inserted *earlier in the same flush*; those requests are
+therefore planned two-phase: stage 2 still runs their searches stacked
+(speculatively, one fused program with everything else), but the cache
+lookup is re-done per request in submission order during stage 3 — a
+request whose re-lookup hits (possibly against a same-flush insert)
+takes the hit exactly as the sequential loop would, and the speculative
+search result is committed (and inserted) only otherwise.  Plans,
+costs, cache contents, and cache hit/miss counters all match the
+sequential per-operator loop; only ``configs_explored`` may exceed it
+(discarded speculative searches are still counted as work done).  The
+property tests in tests/test_plan_broker.py pin this.  If a leader's
+search comes back infeasible (nothing insertable), its followers are
+re-planned one by one through the sequential semantics, so that corner
+matches the per-operator loop too.
 """
 from __future__ import annotations
 
@@ -64,6 +73,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.registry import hot_path
 from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.planning_backend import (BatchCostFn, PlanBackend, Result,
@@ -179,6 +189,23 @@ class PlanBroker:
         return len(self._pending)
 
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def _lookup(req: PlanRequest) -> Optional[Result]:
+        """One cache lookup + validate for ``req`` (sequential
+        semantics); None when it must search."""
+        hit = req.cache.lookup(req.cache_key[0], req.cache_key[1],
+                               req.cache_key[2], req.cluster, req.stats)
+        if hit is None:
+            return None
+        cfg = tuple(int(v) for v in hit)
+        cost = req.commit_fn(cfg)
+        if not req.validate_hit or math.isfinite(cost):
+            return cfg, cost
+        # cached plan invalid under current conditions (degraded
+        # cluster, budget): caller falls through to search
+        return None
+
+    @hot_path("resolves every pending request of the session per flush")
     def flush(self) -> None:
         """Resolve every pending request: dedup -> stacked search ->
         float64 commit -> fan-out (stages 1-3 of the module docstring)."""
@@ -187,7 +214,14 @@ class PlanBroker:
             return
 
         # -- stage 1: cache fronting + within-flush dedup ---------------- #
+        # Interpolating (nearest-neighbor / weighted-average) caches must
+        # observe same-flush inserts, so their lookups are deferred to
+        # stage 3 (submission order); their searches still run stacked in
+        # stage 2, speculatively.  Exact caches cannot hit on anything a
+        # same-flush insert adds under a *different* key, so their lookup
+        # happens here and same-key requests dedup onto one leader.
         leaders: Dict[Tuple, _Exec] = {}
+        order: List[Tuple[str, object]] = []   # stage-3 submission order
         for req, fut in pending:
             if req.cache is None:
                 memo = self._memo.get(self._key(req))
@@ -195,28 +229,32 @@ class PlanBroker:
                     self._bump(req, "broker_dedup_hits")
                     self._resolve(fut, memo[1])
                     continue
+            deferred = (req.cache is not None and req.cache_key is not None
+                        and getattr(req.cache, "mode", "exact") != "exact")
             if req.cache is not None and req.cache_key is not None:
-                hit = req.cache.lookup(req.cache_key[0], req.cache_key[1],
-                                       req.cache_key[2], req.cluster,
-                                       req.stats)
-                if hit is not None:
-                    cfg = tuple(int(v) for v in hit)
-                    cost = req.commit_fn(cfg)
-                    if not req.validate_hit or math.isfinite(cost):
-                        self._resolve(fut, (cfg, cost))
+                if not deferred:
+                    got = self._lookup(req)
+                    if got is not None:
+                        self._resolve(fut, got)
                         continue
-                    # cached plan invalid under current conditions
-                    # (degraded cluster, budget): fall through to search
                 dkey = (("cache", id(req.cache)) + req.cache_key +
                         (req.mode, req.n_random, req.seed))
             else:
                 dkey = ("exact",) + self._key(req)
             led = leaders.get(dkey)
             if led is None:
-                leaders[dkey] = _Exec(req=req, fut=fut)
+                ex = _Exec(req=req, fut=fut)
+                leaders[dkey] = ex
+                order.append(("dleader" if deferred else "leader", ex))
             else:
                 self._bump(req, "broker_dedup_hits")
-                led.followers.append((req, fut))
+                if deferred:
+                    # same cache key, but the sequential loop would give
+                    # it a fresh interpolating lookup after the leader's
+                    # insert: full per-request replay in stage 3
+                    order.append(("dfollower", (req, fut)))
+                else:
+                    led.followers.append((req, fut))
 
         execs = list(leaders.values())
         if not execs:
@@ -232,9 +270,24 @@ class PlanBroker:
             # scan, still stacked per (fn, grid) group
             self._run(retry, force_mode="grid")
 
-        # -- stage 3: float64 commit + fan-out --------------------------- #
-        for ex in execs:
+        # -- stage 3: float64 commit + fan-out, in submission order ------ #
+        for role, entry in order:
+            if role == "dfollower":
+                # sequential per-request replay: its lookup sees every
+                # insert made earlier in this loop
+                freq, ffut = entry
+                self._resolve(ffut, self._solve_one(freq))
+                continue
+            ex = entry
             req = ex.req
+            if role == "dleader":
+                # deferred (interpolating-cache) lookup, now that earlier
+                # requests of this flush have committed their inserts; a
+                # hit discards the speculative stage-2 search
+                got = self._lookup(req)
+                if got is not None:
+                    self._resolve(ex.fut, got)
+                    continue
             res, cost = self._commit(req, ex.res, ex.cost)
             ok = res is not None and math.isfinite(cost)
             if req.cache is None:
@@ -262,6 +315,7 @@ class PlanBroker:
                     self._resolve(ffut, self._solve_one(freq))
 
     # ------------------------------------------------------------------ #
+    @hot_path("dispatches one stacked search program per (fn, grid) group")
     def _run(self, execs: List[_Exec], force_mode: Optional[str] = None
              ) -> None:
         """Execute leaders grouped per (cost-fn, grid, mode) as stacked

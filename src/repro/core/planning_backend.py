@@ -90,6 +90,7 @@ from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.analysis.registry import hot_path
 from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.plan_cache import snap_to_grid
 
@@ -399,13 +400,16 @@ class JaxPlanBackend:
         return self.xp.asarray([] if params is None else params, dtype=dtype)
 
     # -- chunked grid scan --------------------------------------------------- #
+    @hot_path("dispatches one compiled program per grid chunk per request")
     def argmin_grid(self, batch_cost_fn: BatchCostFn,
                     cluster: ClusterConditions,
                     stats: Optional[PlanningStats] = None, *,
                     params=None, chunk_size: int = DEFAULT_CHUNK) -> Result:
         """Chunk-scan the grid with one jitted program per chunk shape.
         First-strict-minimum tie-breaking across chunks matches the numpy
-        backend; within a chunk jnp.argmin also returns the first min."""
+        backend; within a chunk jnp.argmin also returns the first min.
+        Chunk results stay on device until a single cross-chunk fold — one
+        host sync per call, not one per chunk."""
         jax, jnp = self._jax, self.xp
         stats = stats if stats is not None else PlanningStats()
         total = cluster.grid_size()
@@ -435,18 +439,24 @@ class JaxPlanBackend:
             prog = self._program("scan", batch_cost_fn, cluster,
                                  (chunk, has_params), build)
             p = self._params(params)
-            best_cost, best_flat = math.inf, -1
+            chunk_costs, chunk_flats = [], []
             for lo in range(0, total, chunk):
-                c, f = prog(lo, p)
+                c, f = prog(lo, p)          # async dispatch: no host sync
+                chunk_costs.append(c)
+                chunk_flats.append(f)
                 stats.configs_explored += min(chunk, total - lo)
-                c = float(c)
-                if c < best_cost:
-                    best_cost, best_flat = c, int(f)
-        if best_flat < 0:
+            costs = np.asarray(jnp.stack(chunk_costs))      # one sync
+            flats = np.asarray(jnp.stack(chunk_flats))
+        # np.argmin keeps the first (lowest-lo) chunk on ties — the same
+        # strict-< update order as the old sequential per-chunk fold
+        k = int(np.argmin(costs))
+        best_cost = float(costs[k])
+        if math.isinf(best_cost):
             return None, math.inf
-        idx = np.unravel_index(best_flat, shape)
+        idx = np.unravel_index(int(flats[k]), shape)
         return tuple(int(g[i]) for g, i in zip(grids_np, idx)), best_cost
 
+    @hot_path("dispatches one compiled program per grid chunk per flush")
     def argmin_grid_many(self, batch_cost_fn: BatchCostFn,
                          cluster: ClusterConditions,
                          params_many, *,
@@ -511,6 +521,7 @@ class JaxPlanBackend:
         k = np.argmin(costs, axis=0)
         out: List[Result] = []
         for q in range(Q):
+            # plan-lint: allow(host-sync): costs is host numpy after the single batched sync above
             c = float(costs[k[q], q])
             if math.isinf(c):
                 out.append((None, math.inf))
@@ -572,6 +583,7 @@ class JaxPlanBackend:
 
         return climb
 
+    @hot_path("runs the fused whole-ensemble climb program per request")
     def hill_climb_ensemble(self, batch_cost_fn: BatchCostFn,
                             cluster: ClusterConditions,
                             starts: Optional[Sequence[Sequence[int]]] = None,
@@ -604,6 +616,7 @@ class JaxPlanBackend:
         res = tuple(int(grids_np[d][idx[d]]) for d in range(n_dims))
         return res, float(cost)
 
+    @hot_path("runs the vmapped stacked-ensemble climb program per flush")
     def hill_climb_ensemble_many(self, batch_cost_fn: BatchCostFn,
                                  cluster: ClusterConditions,
                                  params_many, *,

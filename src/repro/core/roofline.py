@@ -475,10 +475,15 @@ def decode_terms_grid(cfg: ModelConfig, shape: ShapeConfig, resources, *,
         + cache / chips
     feasible = hbm < hw["hbm_bytes"] * 0.92
 
+    # decode terms are built purely from int columns x Python floats, which
+    # under jax stay weakly typed end-to-end (train/prefill pick up a strong
+    # dtype through int/int true division).  Anchor with an exact *1.0 so
+    # traces are dtype-stable; float64 numpy is bit-unchanged.
+    one = xp.ones(())
     return RooflineGrid(
-        compute_s=flops / (chips * hw["peak_flops"]),
-        memory_s=traffic / hw["hbm_bw"],
-        collective_s=wire / hw["link_bw"],
+        compute_s=flops / (chips * hw["peak_flops"]) * one,
+        memory_s=traffic / hw["hbm_bw"] * one,
+        collective_s=wire / hw["link_bw"] * one,
         flops_per_chip=flops / chips,
         traffic_per_chip=traffic,
         wire_per_chip=wire,
@@ -549,3 +554,52 @@ def terms_grid(cfg: ModelConfig, shape: ShapeConfig, resources, *,
     if shape.kind == "prefill":
         return prefill_terms_grid(cfg, shape, resources, xp=xp, **kw)
     return decode_terms_grid(cfg, shape, resources, xp=xp, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# plan-lint registration: expose the TPU roofline surfaces (one per shape
+# kind, with the sharding planner's feasibility masking) to the static
+# analyzer.  Factories are lazy; TpuCluster is imported inside them because
+# sharding_planner imports this module.
+# --------------------------------------------------------------------------- #
+
+def _register_lint_surfaces() -> None:
+    from repro.analysis.registry import CostSurface, register_cost_surface
+
+    lint_cfg = ModelConfig(name="lint-dense", family="dense", n_layers=4,
+                           d_model=256, n_heads=8, n_kv_heads=8,
+                           d_ff=1024, vocab_size=1024)
+
+    def tpu_surface(kind: str) -> None:
+        shape = ShapeConfig(name=f"lint-{kind}", seq_len=512,
+                            global_batch=8, kind=kind)
+
+        def make_fn(xp):
+            global_batch = shape.global_batch
+
+            def fn(configs, params):
+                # params = [chip_budget, max_chips] + the same feasibility
+                # masking as ShardingPlanner._grid_fn
+                g = terms_grid(lint_cfg, shape, configs, xp=xp, hw=HW)
+                bad = ~g.feasible
+                bad = bad | (g.chips > params[0]) | (g.chips > params[1])
+                if kind == "train":
+                    a = xp.asarray(configs)
+                    denom = a[:, 0] * a[:, 1] * a[:, 3]
+                    bad = bad | ((global_batch % denom) != 0)
+                return xp.where(bad, xp.inf, g.step_s)
+            return fn
+
+        def make_cluster():
+            from repro.core.sharding_planner import TpuCluster
+            return TpuCluster().dims(shape)
+
+        register_cost_surface(CostSurface(
+            name=f"tpu/roofline/{kind}", domain="tpu", make_fn=make_fn,
+            make_cluster=make_cluster, params=(64.0, 256.0)))
+
+    for kind in ("train", "prefill", "decode"):
+        tpu_surface(kind)
+
+
+_register_lint_surfaces()

@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.registry import hot_path
 from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.planning_backend import (  # noqa: F401 (re-exported types)
     DEFAULT_CHUNK, BatchCostFn, JaxPlanBackend, Result, _decode_flat,
@@ -310,6 +311,7 @@ def _neighbor_kernel(cur_ref, params_ref, *refs, cost, shapes, metas,
 
 # ------------------------------ call builders ------------------------------- #
 
+@hot_path("builds the fused scan program the per-chunk dispatch loop runs")
 def build_scan(fn: BatchCostFn, cluster: ClusterConditions, *, block: int,
                nb: int, nq: int, lo0: int, has_params: bool, p_width: int,
                masked: bool, interpret: bool):
@@ -348,6 +350,7 @@ def build_scan(fn: BatchCostFn, cluster: ClusterConditions, *, block: int,
     return jax.jit(lambda p: call(p, *const_ins))
 
 
+@hot_path("builds the stacked scan program a flush runs per block chunk")
 def build_scan_many_unrolled(fn: BatchCostFn, cluster: ClusterConditions, *,
                              block: int, nb: int, nq: int, lo0: int,
                              p_width: int, masked: bool, interpret: bool):
@@ -374,6 +377,7 @@ def build_scan_many_unrolled(fn: BatchCostFn, cluster: ClusterConditions, *,
     return jax.jit(lambda p: call(p, *const_ins))
 
 
+@hot_path("builds the neighbor-step program the climb loop runs per iteration")
 def build_neighbor_step(fn: BatchCostFn, cluster: ClusterConditions, *,
                         n_starts: int, has_params: bool, p_width: int,
                         interpret: bool):
@@ -463,6 +467,7 @@ class PallasPlanBackend(JaxPlanBackend):
 
     # -- fused grid scan ------------------------------------------------------ #
 
+    @hot_path("dispatches one fused kernel program per block chunk per request")
     def argmin_grid(self, batch_cost_fn: BatchCostFn,
                     cluster: ClusterConditions,
                     stats: Optional[PlanningStats] = None, *,
@@ -517,6 +522,7 @@ class PallasPlanBackend(JaxPlanBackend):
         c, f = prog(p)
         return self._result(cluster, int(f[0, 0]), float(c[0, 0]))
 
+    @hot_path("dispatches the stacked fused-kernel scan per flush")
     def argmin_grid_many(self, batch_cost_fn: BatchCostFn,
                          cluster: ClusterConditions,
                          params_many, *,
@@ -589,6 +595,7 @@ class PallasPlanBackend(JaxPlanBackend):
 
     # -- ensemble climb on the fused neighbor step ---------------------------- #
 
+    @hot_path("runs the fused neighbor-step kernel once per climb iteration")
     def hill_climb_ensemble(self, batch_cost_fn: BatchCostFn,
                             cluster: ClusterConditions,
                             starts: Optional[Sequence[Sequence[int]]] = None,
@@ -620,8 +627,9 @@ class PallasPlanBackend(JaxPlanBackend):
         for it in range(max_iters):
             center, best_c, best_j = prog(jnp.asarray(cur, dtype=jnp.int32),
                                           p)
+            # plan-lint: allow(host-sync): the climb is host-driven — each fused neighbor step must land before the move/stop decision; in-kernel while_loop fusion is the ROADMAP follow-up
             center = np.asarray(center, dtype=np.float64)
-            best_c = np.asarray(best_c, dtype=np.float64)
+            best_c = np.asarray(best_c, dtype=np.float64)  # plan-lint: allow(host-sync): same per-iteration fold as the line above
             best_j = np.asarray(best_j)
             nbr = cur[:, None, :] + offs[None, :, :]
             valid = ((nbr >= 0) & (nbr < sizes)).all(-1)
@@ -639,6 +647,7 @@ class PallasPlanBackend(JaxPlanBackend):
         res = tuple(int(grids_np[d][cur[i, d]]) for d in range(n_dims))
         return res, float(cur_cost[i])
 
+    @hot_path("drives one host climb per stacked request in a flush")
     def hill_climb_ensemble_many(self, batch_cost_fn: BatchCostFn,
                                  cluster: ClusterConditions,
                                  params_many, *,

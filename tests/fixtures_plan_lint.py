@@ -1,0 +1,104 @@
+"""Deliberately-broken cost surfaces and hot paths for the plan-lint
+golden tests (tests/test_analysis.py).
+
+Every function here violates exactly one plan-lint contract (named in
+its docstring) so the tests can assert the precise rule id and location
+the analyzer must emit — and nothing else.  None of these are imported
+by shipped code; the hot-path fixtures live in this file (outside
+``src/repro``) precisely so ``lint_tree`` never sees them.
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.analysis.registry import hot_path
+
+
+# --------------------------- jaxpr-lint fixtures --------------------------- #
+
+def fn_tracer_bool(configs, params):
+    """rule tracer-bool: Python branch on a traced comparison."""
+    if configs[0, 0] > 0:
+        return configs[:, 0].astype(jnp.float32)
+    return configs[:, 0].astype(jnp.float32) * 2.0
+
+
+def fn_weak_type(configs, params):
+    """rule weak-type: int32 column x Python float stays weakly typed."""
+    return configs[:, 0] * 2.0
+
+
+def fn_low_precision(configs, params):
+    """rule dtype: float16 intermediate on the argmin path."""
+    c = configs[:, 0].astype(jnp.float16)
+    return (c * params[0]).astype(jnp.float32)
+
+
+def fn_multi_output(configs, params):
+    """rule dtype: two outputs where the contract wants one vector."""
+    c = configs[:, 0].astype(jnp.float32)
+    return c, c * params[0]
+
+
+def fn_wrong_shape(configs, params):
+    """rule dtype: full (n_configs, n_dims) grid instead of (n_configs,)."""
+    return configs.astype(jnp.float32) * params[0]
+
+
+def fn_int_output(configs, params):
+    """rule dtype: integer cost vector (inf mask and argmin need float)."""
+    return configs[:, 0] * 2
+
+
+def fn_cross_reduce(configs, params):
+    """rule cross-config-reduce: sum across the config axis couples
+    every row's cost to the chunk geometry."""
+    costs = configs[:, 0].astype(jnp.float32)
+    return costs + jnp.sum(costs)
+
+
+def make_fn_scalar_capture():
+    """rule closure-capture (warn): 0-d array baked in as a jaxpr const."""
+    scalar = jnp.asarray(3.5)
+
+    def fn(configs, params):
+        return configs[:, 0].astype(jnp.float32) + scalar
+
+    return fn
+
+
+def make_fn_clean():
+    """No findings: strong-typed, elementwise, param-driven."""
+
+    def fn(configs, params):
+        a = configs[:, 0].astype(jnp.float32)
+        b = configs[:, 1].astype(jnp.float32)
+        return (a - params[0]) ** 2 + b * params[1]
+
+    return fn
+
+
+# --------------------------- hot-path fixtures ----------------------------- #
+
+@hot_path("fixture: per-iteration sync in a chunk loop")
+def hot_loop_sync(values):
+    out = []
+    for v in values:
+        out.append(float(v))
+    return np.asarray(out)
+
+
+@hot_path("fixture: allowed single fold")
+def hot_allowed_fold(values):
+    # plan-lint: allow(host-sync): fixture demonstrates a justified fold
+    return float(values[0])
+
+
+def cold_loop_sync(values):
+    """Not @hot_path: identical syncs must NOT be flagged here."""
+    return [float(v) for v in values]
+
+
+# reason-less pragma below: must surface as pragma-no-reason
+# plan-lint: allow(host-sync)
+_PRAGMA_NO_REASON_LINE_MARKER = True

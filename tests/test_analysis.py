@@ -1,0 +1,316 @@
+"""Golden tests for the plan-lint static-analysis subsystem
+(``repro.analysis``): every rule class is exercised on a deliberately
+broken fixture (tests/fixtures_plan_lint.py) asserting the exact rule id
+and location, and the shipped tree is asserted clean (zero false
+positives) so the CI ``--fail-on warn`` gate stays meaningful.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+import fixtures_plan_lint as fx
+from repro.analysis.hotpath_lint import lint_file, lint_tree
+from repro.analysis.jaxpr_lint import lint_cost_fn, lint_registered
+from repro.analysis.recompile_audit import (EXPECTED_COMPILE_COUNTS, PROBES,
+                                            audit_source, audit_sources,
+                                            compare_counts, fresh_backend,
+                                            run_probes, table_hash)
+from repro.analysis.registry import hot_path, iter_cost_surfaces
+from repro.analysis.report import (Finding, apply_pragmas, parse_pragmas,
+                                   pragma_findings, summarize)
+
+FIXTURE_PATH = Path(fx.__file__).resolve()
+FIXTURE_SRC = FIXTURE_PATH.read_text()
+N_DIMS, P_WIDTH = 2, 2
+
+
+def lint(fn, name):
+    return lint_cost_fn(fn, N_DIMS, P_WIDTH, name=name)
+
+
+def fixture_line(needle, exact=False):
+    """1-based line of the first fixture source line containing needle."""
+    for i, text in enumerate(FIXTURE_SRC.splitlines(), start=1):
+        if (text.strip() == needle) if exact else (needle in text):
+            return i
+    raise AssertionError(f"marker {needle!r} not in fixture")
+
+
+def only(findings):
+    assert len(findings) == 1, [f.render() for f in findings]
+    return findings[0]
+
+
+# ------------------------- pass 1: jaxpr lint ------------------------------ #
+
+def test_tracer_bool_branch():
+    f = only(lint(fx.fn_tracer_bool, "fx/tracer-bool"))
+    assert f.rule == "tracer-bool"
+    assert f.severity == "error"
+    assert f.path.endswith("tests/fixtures_plan_lint.py")
+    assert f.line == fx.fn_tracer_bool.__code__.co_firstlineno
+
+
+def test_weak_type_output():
+    f = only(lint(fx.fn_weak_type, "fx/weak-type"))
+    assert (f.rule, f.severity) == ("weak-type", "warn")
+    assert f.line == fx.fn_weak_type.__code__.co_firstlineno
+
+
+def test_low_precision_cast():
+    f = only(lint(fx.fn_low_precision, "fx/f16"))
+    assert (f.rule, f.severity) == ("dtype", "error")
+    assert "float16" in f.message
+
+
+def test_multi_output():
+    f = only(lint(fx.fn_multi_output, "fx/multi"))
+    assert (f.rule, f.severity) == ("dtype", "error")
+    assert "2 outputs" in f.message
+
+
+def test_wrong_shape_output():
+    f = only(lint(fx.fn_wrong_shape, "fx/shape"))
+    assert (f.rule, f.severity) == ("dtype", "error")
+    assert "shape" in f.message
+    assert f.line == fx.fn_wrong_shape.__code__.co_firstlineno
+
+
+def test_integer_output():
+    f = only(lint(fx.fn_int_output, "fx/int"))
+    assert (f.rule, f.severity) == ("dtype", "error")
+    assert "not float" in f.message
+
+
+def test_cross_config_reduce():
+    f = only(lint(fx.fn_cross_reduce, "fx/reduce"))
+    assert (f.rule, f.severity) == ("cross-config-reduce", "error")
+    assert f.line == fx.fn_cross_reduce.__code__.co_firstlineno
+
+
+def test_scalar_closure_capture():
+    fn = fx.make_fn_scalar_capture()
+    f = only(lint(fn, "fx/capture"))
+    assert (f.rule, f.severity) == ("closure-capture", "warn")
+    assert f.line == fn.__code__.co_firstlineno
+
+
+def test_clean_surface_has_no_findings():
+    assert lint(fx.make_fn_clean(), "fx/clean") == []
+
+
+def test_registered_surfaces_lint_clean():
+    """Zero false positives on every shipped cost surface."""
+    findings = lint_registered()
+    assert findings == [], [f.render() for f in findings]
+    names = {s.name for s in iter_cost_surfaces()}
+    assert {"db/paper/SMJ", "db/paper/BHJ",
+            "tpu/roofline/train", "tpu/roofline/decode"} <= names
+
+
+# ---------------------- pass 3: hot-path host-sync ------------------------- #
+
+@pytest.fixture(scope="module")
+def hot_findings():
+    return lint_file(FIXTURE_PATH)
+
+
+def test_hot_loop_sync_is_warn(hot_findings):
+    line = fixture_line("out.append(float(v))")
+    f = only([f for f in hot_findings
+              if f.obj == "hot_loop_sync" and f.severity == "warn"])
+    assert f.rule == "host-sync"
+    assert f.line == line
+    assert not f.allowed
+
+
+def test_hot_depth_zero_sync_is_info(hot_findings):
+    line = fixture_line("return np.asarray(out)")
+    f = only([f for f in hot_findings
+              if f.obj == "hot_loop_sync" and f.severity == "info"])
+    assert (f.rule, f.line) == ("host-sync", line)
+
+
+def test_pragma_allows_with_reason(hot_findings):
+    f = only([f for f in hot_findings if f.obj == "hot_allowed_fold"])
+    assert f.rule == "host-sync"
+    assert f.allowed
+    assert "justified fold" in f.allow_reason
+
+
+def test_cold_function_not_linted(hot_findings):
+    assert not [f for f in hot_findings if f.obj == "cold_loop_sync"]
+
+
+def test_reasonless_pragma_flagged(hot_findings):
+    line = fixture_line("# plan-lint: allow(host-sync)", exact=True)
+    f = only([f for f in hot_findings if f.rule == "pragma-no-reason"])
+    assert (f.severity, f.line) == ("warn", line)
+
+
+def test_shipped_tree_hot_paths_clean():
+    """No unallowed warn+ host-sync findings in src/repro."""
+    bad = [f for f in lint_tree()
+           if not f.allowed and f.severity != "info"]
+    assert bad == [], [f.render() for f in bad]
+
+
+def test_hot_path_decorator_requires_reason():
+    with pytest.raises(ValueError):
+        hot_path("")
+
+    @hot_path("why this is hot")
+    def g(x):
+        return x
+
+    assert g(3) == 3
+    assert g.__plan_lint_hot_reason__ == "why this is hot"
+
+
+# ------------------- pass 2 (static): memo-key coverage -------------------- #
+
+UNKEYED_SRC = '''\
+class FakeBackend:
+    def argmin(self, fn, cluster, nonce):
+        def build():
+            return nonce + 1
+        return self._program("scan", fn, cluster, (), build)
+'''
+
+KEYED_SRC = UNKEYED_SRC.replace('(), build', '(nonce,), build')
+
+DERIVED_SRC = '''\
+class FakeBackend:
+    def argmin(self, fn, cluster):
+        grids = cluster.grids
+        shape = tuple(len(g) for g in grids)
+        def build():
+            return shape
+        return self._program("scan", fn, cluster, (), build)
+'''
+
+
+def test_unkeyed_static_arg_flagged(tmp_path):
+    p = tmp_path / "fake_backend.py"
+    p.write_text(UNKEYED_SRC)
+    f = only(audit_source(p))
+    assert (f.rule, f.severity) == ("unkeyed-static-arg", "warn")
+    assert f.obj == "argmin"
+    assert "'nonce'" in f.message
+    assert f.line == 3  # the build() def
+
+
+def test_keyed_static_arg_clean(tmp_path):
+    p = tmp_path / "fake_backend.py"
+    p.write_text(KEYED_SRC)
+    assert audit_source(p) == []
+
+
+def test_derivation_through_comprehension_is_covered(tmp_path):
+    """Locals derived from keyed inputs via a genexp must not flag:
+    comprehension-bound names are not free."""
+    p = tmp_path / "fake_backend.py"
+    p.write_text(DERIVED_SRC)
+    assert audit_source(p) == []
+
+
+def test_shipped_backend_sources_are_keyed():
+    assert audit_sources() == []
+
+
+# ------------------- pass 2 (dynamic): recompile audit --------------------- #
+
+def test_compare_counts_churn_and_stale():
+    exp = EXPECTED_COMPILE_COUNTS["jax"]
+    churn = dict(exp)
+    churn[PROBES[0]] += 1
+    f = only(compare_counts("jax", churn))
+    assert (f.rule, f.severity) == ("recompile-churn", "error")
+    assert f.obj == f"jax.{PROBES[0]}"
+
+    reuse = next(p for p in PROBES if exp[p] >= 1)
+    stale = dict(exp)
+    stale[reuse] -= 1
+    f = only(compare_counts("jax", stale))
+    assert (f.rule, f.severity) == ("stale-program", "error")
+
+    assert compare_counts("jax", dict(exp)) == []
+
+
+def test_numpy_backend_never_compiles():
+    counts = run_probes(fresh_backend("numpy"))
+    assert counts == EXPECTED_COMPILE_COUNTS["numpy"]
+    assert set(counts) == set(PROBES)
+
+
+def test_jax_backend_compile_counts_match_contract():
+    pytest.importorskip("jax")
+    counts = run_probes(fresh_backend("jax"))
+    assert counts == EXPECTED_COMPILE_COUNTS["jax"]
+
+
+def test_table_hash_is_stable_and_sensitive():
+    t = {"jax": {"p": 1}, "numpy": {"p": 0}}
+    h = table_hash(t)
+    assert h == table_hash({"numpy": {"p": 0}, "jax": {"p": 1}})
+    assert h != table_hash({"jax": {"p": 2}, "numpy": {"p": 0}})
+    assert len(h) == 12
+
+
+# --------------------------- report / pragmas ------------------------------ #
+
+def test_parse_pragmas_covers_own_and_next_line():
+    src = "x = 1\n# plan-lint: allow(dtype, weak-type): known promotion\ny = 2\nz = 3\n"
+    pragmas = parse_pragmas(src)
+    assert set(pragmas) == {2, 3}
+    rules, reason = pragmas[3]
+    assert rules == ("dtype", "weak-type")
+    assert reason == "known promotion"
+
+
+def test_apply_pragmas_matches_rule_and_line():
+    src = "# plan-lint: allow(dtype): fine here\ny = 2\n"
+    hit = Finding(rule="dtype", severity="error", path="f.py", line=2,
+                  obj="g", message="m")
+    wrong_rule = Finding(rule="weak-type", severity="warn", path="f.py",
+                         line=2, obj="g", message="m")
+    far = Finding(rule="dtype", severity="error", path="f.py", line=4,
+                  obj="g", message="m")
+    apply_pragmas([hit, wrong_rule, far], {"f.py": src})
+    assert hit.allowed and hit.allow_reason == "fine here"
+    assert not wrong_rule.allowed
+    assert not far.allowed
+
+
+def test_summarize_excludes_allowed():
+    a = Finding(rule="dtype", severity="error", path="f.py", line=1,
+                obj="g", message="m", allowed=True, allow_reason="r")
+    b = Finding(rule="host-sync", severity="warn", path="f.py", line=2,
+                obj="g", message="m")
+    s = summarize([a, b])
+    assert s["by_severity"] == {"info": 0, "warn": 1, "error": 0}
+    assert s["by_rule"] == {"host-sync": 1}
+    assert s["allowed"] == 1 and s["total"] == 2
+
+
+def test_pragma_findings_only_reasonless():
+    src = ("# plan-lint: allow(dtype): ok\n"
+           "# plan-lint: allow(dtype)\n")
+    fs = pragma_findings("f.py", src)
+    assert [f.line for f in fs] == [2]
+    assert fs[0].rule == "pragma-no-reason"
+
+
+# ------------------------------- CLI --------------------------------------- #
+
+def test_cli_clean_tree_exits_zero(tmp_path):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "plan_lint.json"
+    rc = main(["--skip-audit", "--fail-on", "warn", "--json", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert payload["summary"]["by_severity"]["warn"] == 0
+    assert payload["summary"]["by_severity"]["error"] == 0
+    assert {"findings", "summary", "compile_counts", "table_hash"} \
+        <= set(payload)

@@ -365,6 +365,103 @@ def test_env_backend_lane_broker_identical_with_sequential(
             [seq.plan_resources(*op) for op in ops]
 
 
+# -------------- interpolating caches: two-phase flush re-lookup ------------- #
+
+@pytest.mark.parametrize("mode", ["nearest_neighbor", "weighted_average"])
+def test_broker_interpolating_cache_sequential_identical(mode):
+    """NN / weighted-average cache lookups must observe *same-flush*
+    inserts: one flush over three requests (miss -> search -> insert,
+    near-key interpolating hit, exact-key replay) must equal the strictly
+    sequential per-request loop in plans, costs, cache contents AND cache
+    hit/miss/insert counters.  Before the two-phase flush, the near-key
+    request ran its own search against the flush-entry cache snapshot and
+    polluted the store with a second entry."""
+    from repro.core.plan_broker import PlanRequest
+
+    def batch_fn(cfgs, params):
+        a = np.asarray(cfgs, dtype=np.float64)
+        return (a[:, 0] - params[0]) ** 2 + 0.5 * a[:, 1]
+
+    def commit_fn(target):
+        return lambda cfg: float((cfg[0] - target) ** 2 + 0.5 * cfg[1])
+
+    cluster = ClusterConditions(dims=(ResourceDim("a", 1, 10),
+                                      ResourceDim("b", 1, 3)))
+    # (data_key, param target): near-key pair within the NN threshold,
+    # plus an exact-key recurrence with different params
+    jobs = [(5.0, 3.0), (5.5, 8.0), (5.0, 9.0)]
+
+    def make_reqs(cache):
+        return [PlanRequest(fn=batch_fn, cluster=cluster,
+                            params=np.asarray([t]), commit_fn=commit_fn(t),
+                            mode="grid", cache=cache,
+                            cache_key=("M", "join", k), validate_hit=True)
+                for k, t in jobs]
+
+    seq_cache = ResourcePlanCache(mode, threshold=1.0)
+    seq_broker = PlanBroker("numpy")
+    expect = [seq_broker._solve_one(r) for r in make_reqs(seq_cache)]
+
+    brk_cache = ResourcePlanCache(mode, threshold=1.0)
+    broker = PlanBroker("numpy")
+    futs = [broker.submit(r) for r in make_reqs(brk_cache)]
+    assert broker.pending_count() == 3        # nothing resolved early
+    got = [f.result() for f in futs]          # ONE flush
+
+    assert got == expect
+    # the near-key request must NOT have inserted a second entry
+    assert brk_cache._store.keys() == seq_cache._store.keys()
+    for k in seq_cache._store:
+        assert brk_cache._store[k].keys == seq_cache._store[k].keys
+        assert brk_cache._store[k].configs == seq_cache._store[k].configs
+    assert brk_cache.counters_snapshot() == seq_cache.counters_snapshot()
+
+
+@pytest.mark.parametrize("mode", ["nearest_neighbor", "weighted_average"])
+def test_broker_interpolating_cache_exact_key_still_dedups(mode):
+    """Interpolating-cache requests still ride the stacked stage-2 search
+    (speculative), and an invalid-under-validation hit falls through to
+    the speculative result exactly like the sequential loop."""
+    from repro.core.plan_broker import PlanRequest
+
+    def batch_fn(cfgs, params):
+        a = np.asarray(cfgs, dtype=np.float64)
+        return (a[:, 0] - params[0]) ** 2 + 0.5 * a[:, 1]
+
+    cluster = ClusterConditions(dims=(ResourceDim("a", 1, 10),
+                                      ResourceDim("b", 1, 3)))
+    # commit rejects the would-be interpolated hit (a=3) for the second
+    # request, so it must fall through to its own search
+    def commit2(cfg):
+        return math.inf if cfg[0] == 3 else \
+            float((cfg[0] - 8.0) ** 2 + 0.5 * cfg[1])
+
+    cache_seq = ResourcePlanCache(mode, threshold=1.0)
+    cache_brk = ResourcePlanCache(mode, threshold=1.0)
+
+    def make_reqs(cache):
+        r1 = PlanRequest(fn=batch_fn, cluster=cluster,
+                         params=np.asarray([3.0]),
+                         commit_fn=lambda c: float((c[0] - 3.0) ** 2
+                                                   + 0.5 * c[1]),
+                         mode="grid", cache=cache,
+                         cache_key=("M", "join", 5.0), validate_hit=True)
+        r2 = PlanRequest(fn=batch_fn, cluster=cluster,
+                         params=np.asarray([8.0]), commit_fn=commit2,
+                         mode="grid", cache=cache,
+                         cache_key=("M", "join", 5.5), validate_hit=True)
+        return [r1, r2]
+
+    seq = PlanBroker("numpy")
+    expect = [seq._solve_one(r) for r in make_reqs(cache_seq)]
+    brk = PlanBroker("numpy")
+    futs = [brk.submit(r) for r in make_reqs(cache_brk)]
+    got = [f.result() for f in futs]
+    assert got == expect
+    assert expect[1][0] == (8, 1)             # searched, not the stale hit
+    assert cache_brk.counters_snapshot() == cache_seq.counters_snapshot()
+
+
 # --------------------------- cache counters -------------------------------- #
 
 def test_cache_counters_per_model_and_kind():
