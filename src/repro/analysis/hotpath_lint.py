@@ -18,6 +18,22 @@ rule ``host-sync``
       documented pattern (fold once at the end); it stays visible in the
       report without failing ``--fail-on warn``.
 
+**Host-value tracking.**  A name assigned from an expression containing
+``np.asarray(...)`` (or aliased from such a name) holds a *numpy* array:
+the device->host transfer already happened at the asarray.  Subsequent
+``float(x)`` / ``x.item()`` on these names — e.g. the per-request decode
+loop reading a synced ``(C, Q)`` cost matrix — are free and NOT flagged,
+so the fold-once-then-decode pattern needs no pragmas.  The asarray call
+itself is still the flagged sync.
+
+rule ``sync-budget``
+    ``@hot_path(..., folds=N)`` declares the function's depth-zero
+    host-sync budget: the documented end-of-scan fold sites.  When the
+    visitor finds MORE depth-zero syncs than declared, a **warn** fires
+    at the function head — the cross-shard fold must stay the single
+    (well, declared) synchronization point, and new un-budgeted syncs
+    are exactly how overlap regressions sneak in.
+
 Suppressions use the inline pragma — ``# plan-lint:`` then
 ``allow(host-sync): reason`` — on the offending line or the line above;
 a pragma without a reason is a ``pragma-no-reason`` warning (report.py).
@@ -26,7 +42,7 @@ from __future__ import annotations
 
 import ast
 from pathlib import Path
-from typing import Iterator, List, Tuple
+from typing import Iterator, List, Optional, Set, Tuple
 
 from repro.analysis.report import (Finding, apply_pragmas, pragma_findings)
 
@@ -66,14 +82,32 @@ def _sync_call(node: ast.Call) -> str:
     return ""
 
 
+def _is_np_asarray(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "asarray"
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id in NP_MODULE_NAMES)
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    """The base Name of a subscript/attribute chain (``costs[k[q], q]``
+    -> ``costs``), or None."""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
 class _HotFnVisitor(ast.NodeVisitor):
-    """Walk one hot function (nested defs included), tracking loop depth."""
+    """Walk one hot function (nested defs included), tracking loop depth
+    and which names hold already-synced host (numpy) values."""
 
     def __init__(self, path: str, qualname: str, reason: str):
         self.path = path
         self.qualname = qualname
         self.reason = reason
         self.loop_depth = 0
+        self.host_names: Set[str] = set()
         self.findings: List[Finding] = []
 
     def _loop(self, node):
@@ -83,9 +117,38 @@ class _HotFnVisitor(ast.NodeVisitor):
 
     visit_For = visit_While = visit_AsyncFor = _loop
 
+    def _is_hosty(self, expr: ast.AST) -> bool:
+        """The expression yields a host (numpy) value: it contains an
+        ``np.asarray`` call, or roots in an already-tracked name."""
+        if any(_is_np_asarray(n) for n in ast.walk(expr)):
+            return True
+        root = _root_name(expr)
+        return root is not None and root in self.host_names
+
+    def visit_Assign(self, node: ast.Assign):
+        if self._is_hosty(node.value):
+            for tgt in node.targets:
+                elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+                self.host_names.update(
+                    e.id for e in elts if isinstance(e, ast.Name))
+        self.generic_visit(node)
+
     def visit_Call(self, node: ast.Call):
         desc = _sync_call(node)
         if desc:
+            # float()/.item() on a tracked host name is not a device
+            # sync — the transfer happened at the asarray that fed it
+            arg = None
+            if isinstance(node.func, ast.Name) and node.args:
+                arg = node.args[0]                 # float(x)
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item":
+                arg = node.func.value              # x.item()
+            if arg is not None and not _is_np_asarray(node):
+                root = _root_name(arg)
+                if root is not None and root in self.host_names:
+                    self.generic_visit(node)
+                    return
             in_loop = self.loop_depth > 0
             self.findings.append(Finding(
                 rule="host-sync",
@@ -100,8 +163,10 @@ class _HotFnVisitor(ast.NodeVisitor):
 
 
 def _iter_hot_functions(tree: ast.Module
-                        ) -> Iterator[Tuple[ast.AST, str, str]]:
-    """(function node, qualname, reason) for every @hot_path def."""
+                        ) -> Iterator[Tuple[ast.AST, str, str,
+                                            Optional[int]]]:
+    """(function node, qualname, reason, declared folds budget) for
+    every @hot_path def."""
     stack: List[Tuple[ast.AST, str]] = [(tree, "")]
     while stack:
         node, prefix = stack.pop()
@@ -111,12 +176,17 @@ def _iter_hot_functions(tree: ast.Module
                 hot = [d for d in child.decorator_list
                        if _is_hot_decorator(d)]
                 if hot:
-                    reason = ""
+                    reason, folds = "", None
                     d = hot[0]
-                    if isinstance(d, ast.Call) and d.args and \
-                            isinstance(d.args[0], ast.Constant):
-                        reason = str(d.args[0].value)
-                    yield child, qual, reason
+                    if isinstance(d, ast.Call):
+                        if d.args and isinstance(d.args[0], ast.Constant):
+                            reason = str(d.args[0].value)
+                        for kw in d.keywords:
+                            if kw.arg == "folds" and \
+                                    isinstance(kw.value, ast.Constant) \
+                                    and isinstance(kw.value.value, int):
+                                folds = kw.value.value
+                    yield child, qual, reason, folds
                 else:
                     # nested defs of a hot fn are covered by its visitor;
                     # only recurse into *non*-hot scopes looking for more
@@ -138,12 +208,23 @@ def lint_file(path: Path) -> List[Finding]:
                         message=f"file does not parse: {e.msg}")]
     rel = _rel(path)
     findings: List[Finding] = []
-    for fn_node, qual, reason in _iter_hot_functions(tree):
+    for fn_node, qual, reason, folds in _iter_hot_functions(tree):
         v = _HotFnVisitor(rel, qual, reason)
         # visit the body (not the def itself, so decorators are skipped)
         for stmt in fn_node.body:
             v.visit(stmt)
         findings.extend(v.findings)
+        if folds is not None:
+            depth0 = sum(1 for f in v.findings if f.severity == "info")
+            if depth0 > folds:
+                findings.append(Finding(
+                    rule="sync-budget", severity="warn", path=rel,
+                    line=fn_node.lineno, obj=qual,
+                    message=(f"{depth0} depth-zero host syncs exceed the "
+                             f"declared folds={folds} budget — the "
+                             "cross-shard fold must stay the declared "
+                             "synchronization point (raise folds only "
+                             "with the design note to match)")))
     findings.extend(pragma_findings(rel, source))
     return apply_pragmas(findings, {rel: source})
 

@@ -10,8 +10,11 @@ counted, deriving the *actual* compile count per probe.  The battery
 sweeps exactly the runtime-varying inputs the memo key must cover:
 request params (must NOT rebuild), chunk geometry, stacked flush size Q
 (must rebuild once per *padded* Q — the Q-padding contract), and the
-grid itself.  Actuals are compared against the per-backend
-``EXPECTED_COMPILE_COUNTS`` table:
+grid itself.  Actuals are compared against the per-backend contract —
+``expected_compile_counts(name, plan_devices())``, the
+``EXPECTED_COMPILE_COUNTS`` one-device table adjusted for the plan-mesh
+device count (device-even padding is a memo-key component, so a larger
+mesh legitimately collapses compile classes):
 
 rule ``recompile-churn`` (error)
     More builds than the contract: a varying input leaked into the key
@@ -64,12 +67,17 @@ _BACKEND_SOURCES = (
 PROBES = ("scan_params_reuse", "scan_chunk_churn", "scan_many_qpad",
           "climb_params_reuse", "climb_many_qpad", "grid_rekey")
 
-# The per-backend compile-count contract for the probe battery below.
-# numpy compiles nothing; jax keys chunk geometry (so the chunk churn
-# probe legitimately builds twice); pallas derives its block size from
-# the backend (chunk_size is not a trace input, so one build); the
-# pallas climb reuses ONE neighbor-step program across a stacked batch
-# (its many-path loops per request), where jax builds per padded Q.
+# The per-backend compile-count contract for the probe battery below,
+# at ONE plan-mesh device.  numpy compiles nothing; jax keys chunk
+# geometry (so the chunk churn probe legitimately builds twice); pallas
+# derives its block size from the backend (chunk_size is not a trace
+# input, so one build); the pallas climb reuses ONE neighbor-step
+# program across a stacked batch (its many-path loops per request),
+# where jax builds per padded Q.  With a multi-device plan mesh the jax
+# contract SHRINKS (device-even padding collapses chunk/Qpad classes) —
+# use ``expected_compile_counts(name, n_devices)``, which recomputes the
+# device-dependent probes from the same geometry helpers the backends
+# key their program memos on.
 EXPECTED_COMPILE_COUNTS: Dict[str, Dict[str, int]] = {
     "numpy": {p: 0 for p in PROBES},
     "jax": {"scan_params_reuse": 1, "scan_chunk_churn": 2,
@@ -82,6 +90,60 @@ EXPECTED_COMPILE_COUNTS: Dict[str, Dict[str, int]] = {
                "scan_many_qpad": 3, "climb_params_reuse": 1,
                "climb_many_qpad": 1, "grid_rekey": 2},
 }
+
+
+def plan_devices() -> int:
+    """Plan-mesh size the audited backends will shard over (the same
+    REPRO_PLAN_DEVICES-capped local device count the backends use); 1
+    when jax / the mesh helper is unavailable."""
+    try:
+        from repro.launch.mesh import plan_device_count
+        return plan_device_count()
+    except Exception:
+        return 1
+
+
+# probe-battery geometry the device-dependent expectations derive from
+# (keep in sync with run_probes / _small_cluster below)
+_PROBE_ROWS = 4 * 3                 # _small_cluster grid size
+_CHURN_CHUNKS = (8, 4)              # scan_chunk_churn chunk_size sweep
+_SCAN_MANY_QS = range(1, 6)         # scan_many_qpad Q sweep
+_CLIMB_MANY_QS = range(1, 5)        # climb_many_qpad Q sweep
+
+
+def expected_compile_counts(backend_name: str,
+                            n_devices: int = 1) -> Dict[str, int]:
+    """The compile-count contract at ``n_devices`` plan-mesh devices.
+
+    The jax backends key their program memos on sharded-scan geometry —
+    per-device chunk ``min(chunk_size, _pad_multiple(total, D) // D)``,
+    stacked-scan ``(_pad_even(Q), _many_chunk(...))`` and climb
+    ``_pad_multiple(Q, max(2, D))`` — so the expected counts for the
+    geometry-sweeping probes are computed from those same helpers rather
+    than hard-coded: D == 1 reproduces the legacy literal table, while
+    e.g. D == 8 collapses the churn probe's {8, 4} chunk sweep into one
+    class (both clip to the 2-row device share of the 12-row grid) and
+    the climb Q sweep {1..4} into one padded class of 8.  The pallas
+    table is device-independent: its round-robin dispatch re-places the
+    same per-chunk executables across devices without touching the memo
+    keys, and the audit battery runs the interpreted (round-robin) path.
+    """
+    base = dict(EXPECTED_COMPILE_COUNTS[backend_name])
+    D = max(1, int(n_devices))
+    if backend_name not in ("jax", "jax_x64") or D == 1:
+        return base
+    from repro.core.planning_backend import (DEFAULT_CHUNK, _many_chunk,
+                                             _pad_even, _pad_multiple)
+    share = _pad_multiple(_PROBE_ROWS, D) // D
+    base["scan_chunk_churn"] = len(
+        {min(cs, share) for cs in _CHURN_CHUNKS})
+    base["scan_many_qpad"] = len(
+        {(_pad_even(q), _many_chunk(_PROBE_ROWS, _pad_even(q), D,
+                                    DEFAULT_CHUNK))
+         for q in _SCAN_MANY_QS})
+    base["climb_many_qpad"] = len(
+        {_pad_multiple(q, max(2, D)) for q in _CLIMB_MANY_QS})
+    return base
 
 
 def _small_cluster() -> ClusterConditions:
@@ -179,7 +241,7 @@ def compare_counts(backend_name: str, actual: Dict[str, int],
                    expected: Optional[Dict[str, int]] = None
                    ) -> List[Finding]:
     expected = expected if expected is not None \
-        else EXPECTED_COMPILE_COUNTS[backend_name]
+        else expected_compile_counts(backend_name, plan_devices())
     src = "src/repro/core/planning_backend.py" \
         if backend_name != "pallas" else "src/repro/kernels/plan_scan.py"
     out: List[Finding] = []

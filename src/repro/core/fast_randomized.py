@@ -218,6 +218,12 @@ def fast_randomized_plan(schema: Schema, tables: Sequence[str],
             for p, ch in chosen:
                 if ch is not None:
                     _prefetch_mutation(schema, ch[0], ch[1], costing, impls)
+            if hasattr(costing.broker, "flush_async"):
+                # double-buffered broker: dispatch the generation's wave
+                # now, so its programs run on device while the mutation
+                # loop below does its tree surgery; the first result()
+                # commits the wave in submission order
+                costing.broker.flush_async()
         nxt: List[PlanNode] = []
         for p, ch in chosen:
             q = None if ch is None else \

@@ -64,6 +64,26 @@ property tests in tests/test_plan_broker.py pin this.  If a leader's
 search comes back infeasible (nothing insertable), its followers are
 re-planned one by one through the sequential semantics, so that corner
 matches the per-operator loop too.
+
+Double-buffered flushes: stage 2 is internally split into *dispatch*
+(group, stack, launch the array programs — backends expose this half as
+``argmin_grid_many_async`` / ``hill_climb_ensemble_many_async``) and
+*finalize* (the single host sync reading the winners back).
+``flush_async()`` commits the previous in-flight wave, dispatches the
+currently pending requests as the new wave, and returns WITHOUT syncing:
+the driver (``selinger_join_order``'s next DP level, FastRandomized's
+next generation) enumerates wave N+1 while wave N's programs run on
+device.  Commit order is preserved exactly — wave N's stage-3 commits
+(float64 re-cost, cache inserts, future resolution, in submission
+order) always complete before wave N+1's stage-1 cache lookups, so
+plans, cache contents, and hit/miss counters are bit-identical to
+calling ``flush()`` at the same points; ``PlanFuture.result()`` on an
+in-flight request commits just that wave.  ``double_buffer=False`` (or
+a backend without the async split) degrades ``flush_async`` to
+``flush``.  Within a *synchronous* flush the same split still pays:
+every (fn, grid) group's program is dispatched before any group's
+results are read back, so e.g. a flush mixing SMJ and BHJ operators
+overlaps the two scans.
 """
 from __future__ import annotations
 
@@ -124,7 +144,7 @@ class PlanFuture:
 
     def result(self) -> Result:
         if not self.done:
-            self._broker.flush()
+            self._broker._ensure(self)
         if not self.done:
             raise RuntimeError("broker flush did not resolve this request")
         return self.value
@@ -141,6 +161,19 @@ class _Exec:
     cost: float = math.inf
 
 
+@dataclasses.dataclass
+class _Wave:
+    """One dispatched-but-uncommitted flush wave (the double buffer):
+    its programs are in flight on device; ``finalize`` syncs them, after
+    which stage 3 commits ``order``.  ``futs`` holds the ``id()`` of
+    every future the wave will resolve, so ``PlanFuture.result()`` can
+    commit exactly this wave without flushing newer pending work."""
+    order: List[Tuple[str, object]]
+    execs: List[_Exec]
+    finalize: Callable[[], None]
+    futs: frozenset
+
+
 class PlanBroker:
     """Collects planning requests from every operator of every query in
     flight and resolves them in batched flushes (see module docstring).
@@ -152,9 +185,11 @@ class PlanBroker:
 
     MAX_MEMO = 4096                    # FIFO bound on the session memo
 
-    def __init__(self, backend=None):
+    def __init__(self, backend=None, double_buffer: bool = True):
         self.backend: PlanBackend = get_backend(backend)
+        self.double_buffer = bool(double_buffer)
         self._pending: List[Tuple[PlanRequest, PlanFuture]] = []
+        self._inflight: Optional[_Wave] = None
         # exact-signature session memo for cache-less callers; callers
         # with a ResourcePlanCache keep the cache as their single source
         # of cross-flush reuse (so mutable-cache semantics stay per-op)
@@ -208,18 +243,80 @@ class PlanBroker:
     @hot_path("resolves every pending request of the session per flush")
     def flush(self) -> None:
         """Resolve every pending request: dedup -> stacked search ->
-        float64 commit -> fan-out (stages 1-3 of the module docstring)."""
+        float64 commit -> fan-out (stages 1-3 of the module docstring).
+        Any in-flight double-buffered wave commits first, so sequential
+        ordering is preserved."""
+        self._commit_inflight()
         pending, self._pending = self._pending, []
         if not pending:
             return
+        order, execs = self._stage1(pending)
+        if not execs:
+            return
+        self._finish(order, execs, self._dispatch(execs))
 
-        # -- stage 1: cache fronting + within-flush dedup ---------------- #
-        # Interpolating (nearest-neighbor / weighted-average) caches must
-        # observe same-flush inserts, so their lookups are deferred to
-        # stage 3 (submission order); their searches still run stacked in
-        # stage 2, speculatively.  Exact caches cannot hit on anything a
-        # same-flush insert adds under a *different* key, so their lookup
-        # happens here and same-key requests dedup onto one leader.
+    def flush_async(self) -> None:
+        """Double-buffered flush: commit the previous in-flight wave
+        (its programs ran while the caller enumerated), dispatch the
+        currently pending requests as the NEW in-flight wave, and return
+        without syncing.  Results land at the next ``flush_async()`` /
+        ``flush()`` / ``result()`` on one of the wave's futures — always
+        committed in submission order before any newer stage-1 lookup,
+        so outcomes are bit-identical to calling ``flush()`` at the same
+        points (the identity the broker property tests pin)."""
+        if not self.double_buffer:
+            self.flush()
+            return
+        self._commit_inflight()
+        pending, self._pending = self._pending, []
+        if not pending:
+            return
+        order, execs = self._stage1(pending)
+        if not execs:
+            return
+        futs = set()
+        for role, entry in order:
+            if role == "dfollower":
+                futs.add(id(entry[1]))
+            else:
+                futs.add(id(entry.fut))
+                futs.update(id(ffut) for _, ffut in entry.followers)
+        self._inflight = _Wave(order=order, execs=execs,
+                               finalize=self._dispatch(execs),
+                               futs=frozenset(futs))
+
+    def inflight_count(self) -> int:
+        """Futures the in-flight wave will resolve (0 when none)."""
+        return 0 if self._inflight is None else len(self._inflight.futs)
+
+    def _commit_inflight(self) -> None:
+        """Finalize + commit the in-flight wave, if any."""
+        wave, self._inflight = self._inflight, None
+        if wave is not None:
+            self._finish(wave.order, wave.execs, wave.finalize)
+
+    def _ensure(self, fut: PlanFuture) -> None:
+        """Resolve ``fut``: a member of the in-flight wave commits just
+        that wave (newer pending requests stay pending, still
+        accumulating into the next one); anything else takes the full
+        flush."""
+        if self._inflight is not None and id(fut) in self._inflight.futs:
+            self._commit_inflight()
+        else:
+            self.flush()
+
+    # ------------------------------------------------------------------ #
+    def _stage1(self, pending: List[Tuple[PlanRequest, PlanFuture]]
+                ) -> Tuple[List[Tuple[str, object]], List[_Exec]]:
+        """Stage 1: cache fronting + within-flush dedup.
+
+        Interpolating (nearest-neighbor / weighted-average) caches must
+        observe same-flush inserts, so their lookups are deferred to
+        stage 3 (submission order); their searches still run stacked in
+        stage 2, speculatively.  Exact caches cannot hit on anything a
+        same-flush insert adds under a *different* key, so their lookup
+        happens here and same-key requests dedup onto one leader.
+        Returns (stage-3 submission order, leader execs)."""
         leaders: Dict[Tuple, _Exec] = {}
         order: List[Tuple[str, object]] = []   # stage-3 submission order
         for req, fut in pending:
@@ -255,13 +352,13 @@ class PlanBroker:
                     order.append(("dfollower", (req, fut)))
                 else:
                     led.followers.append((req, fut))
+        return order, list(leaders.values())
 
-        execs = list(leaders.values())
-        if not execs:
-            return
-
-        # -- stage 2: grouped stacked search ----------------------------- #
-        self._run(execs)
+    def _finish(self, order: List[Tuple[str, object]], execs: List[_Exec],
+                finalize: Callable[[], None]) -> None:
+        """Finalize a dispatched wave (the single host sync), then run
+        stage 3: float64 commit + fan-out, in submission order."""
+        finalize()
         retry = [ex for ex in execs
                  if ex.req.scan_fallback and ex.req.mode == "ensemble"
                  and not math.isfinite(ex.cost)]
@@ -270,7 +367,6 @@ class PlanBroker:
             # scan, still stacked per (fn, grid) group
             self._run(retry, force_mode="grid")
 
-        # -- stage 3: float64 commit + fan-out, in submission order ------ #
         for role, entry in order:
             if role == "dfollower":
                 # sequential per-request replay: its lookup sees every
@@ -316,10 +412,15 @@ class PlanBroker:
 
     # ------------------------------------------------------------------ #
     @hot_path("dispatches one stacked search program per (fn, grid) group")
-    def _run(self, execs: List[_Exec], force_mode: Optional[str] = None
-             ) -> None:
-        """Execute leaders grouped per (cost-fn, grid, mode) as stacked
-        array programs, writing raw (res, cost) back onto each _Exec."""
+    def _dispatch(self, execs: List[_Exec],
+                  force_mode: Optional[str] = None) -> Callable[[], None]:
+        """Stage 2, dispatch half: group leaders per (cost-fn, grid,
+        mode), stack their params, and launch every group's array
+        program via the backend's async split — ALL groups dispatch
+        before any result is read back, so a flush mixing cost surfaces
+        (SMJ and BHJ operators, say) overlaps their scans on device.
+        Returns the zero-arg finalize performing the host syncs and
+        writing raw (res, cost) back onto each _Exec."""
         groups: Dict[Tuple, List[_Exec]] = {}
         for ex in execs:
             req = ex.req
@@ -327,31 +428,56 @@ class PlanBroker:
             gkey = (id(req.fn), req.cluster.dims, mode, req.n_random,
                     req.seed, len(req.params))
             groups.setdefault(gkey, []).append(ex)
+        be = self.backend
+        waves = []
         for gkey, entries in groups.items():
             req0 = entries[0].req
             mode = force_mode or req0.mode
             pm = np.stack([ex.req.params for ex in entries])
             gstats = PlanningStats()
             if mode == "grid":
-                results = self.backend.argmin_grid_many(
-                    req0.fn, req0.cluster, pm, stats=gstats)
+                if hasattr(be, "argmin_grid_many_async"):
+                    fin = be.argmin_grid_many_async(
+                        req0.fn, req0.cluster, pm, stats=gstats)
+                else:               # backend without the async split
+                    results = be.argmin_grid_many(
+                        req0.fn, req0.cluster, pm, stats=gstats)
+                    fin = (lambda r=results: r)
             else:
-                results = self.backend.hill_climb_ensemble_many(
-                    req0.fn, req0.cluster, pm, stats=gstats,
-                    n_random=req0.n_random, seed=req0.seed)
+                if hasattr(be, "hill_climb_ensemble_many_async"):
+                    fin = be.hill_climb_ensemble_many_async(
+                        req0.fn, req0.cluster, pm, stats=gstats,
+                        n_random=req0.n_random, seed=req0.seed)
+                else:
+                    results = be.hill_climb_ensemble_many(
+                        req0.fn, req0.cluster, pm, stats=gstats,
+                        n_random=req0.n_random, seed=req0.seed)
+                    fin = (lambda r=results: r)
             for ex in entries:
                 self._bump(ex.req, "broker_batches")
             self.stats.broker_batches -= len(entries) - 1  # one per group
-            # attribute the group's exploration evenly (grid groups are
-            # exactly grid_size per request; climb convergence varies per
-            # request, so the split is approximate there)
-            share, rem = divmod(gstats.configs_explored, len(entries))
-            for i, (ex, rc) in enumerate(zip(entries, results)):
-                ex.res, ex.cost = rc
-                if ex.req.stats is not None:
-                    n = share + (rem if i == 0 else 0)
-                    ex.req.stats.configs_explored += n
-                    ex.req.stats.cost_calls += n
+            waves.append((entries, gstats, fin))
+
+        def finalize() -> None:
+            for entries, gstats, fin in waves:
+                results = fin()
+                # attribute the group's exploration evenly (grid groups
+                # are exactly grid_size per request; climb convergence
+                # varies per request, so the split is approximate there)
+                share, rem = divmod(gstats.configs_explored, len(entries))
+                for i, (ex, rc) in enumerate(zip(entries, results)):
+                    ex.res, ex.cost = rc
+                    if ex.req.stats is not None:
+                        n = share + (rem if i == 0 else 0)
+                        ex.req.stats.configs_explored += n
+                        ex.req.stats.cost_calls += n
+        return finalize
+
+    def _run(self, execs: List[_Exec], force_mode: Optional[str] = None
+             ) -> None:
+        """Synchronous stage 2: dispatch + immediate finalize (the
+        scan_fallback retry path)."""
+        self._dispatch(execs, force_mode)()
 
     def _commit(self, req: PlanRequest, res, cost: float) -> Result:
         """Float64 commit of one raw search result: re-cost through the

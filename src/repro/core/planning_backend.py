@@ -81,6 +81,38 @@ programs compute in float64 and argmin selection is exact — float32
 rounding can no longer flip a winner, and the planners' float64
 re-commit fallback shrinks to a parity assertion.  Backends advertise
 this via ``backend.exact`` (True for numpy and jax_x64).
+
+Multi-device sharding
+---------------------
+When more than one local device is visible (real TPU/GPU hosts, or CPU
+hosts under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``), the
+jax-family backends partition the **config axis** of every grid scan
+over a 1-D ``"plan"`` mesh (``repro.launch.mesh.plan_mesh``) via
+``shard_map``: each dispatch covers a contiguous span of ``D * chunk``
+flat row ids, every device reduces its own contiguous ``chunk``-row
+shard to a ``(best_cost, best_flat)`` pair on-device, and the cross-shard
+fold happens *inside* the jitted program.  Because the flat row ids are
+globally ordered and each shard holds an ascending contiguous range,
+``jnp.argmin`` over the per-shard bests (first minimum = lowest device =
+lowest rows) reproduces the strict-< first-minimum tie-break exactly, so
+sharded results are bit-identical with the single-device and numpy
+paths.  The stacked ensemble climb shards the *request* axis instead
+(vmap lanes are independent, so trajectories are unchanged).  The host
+still performs one ``np.asarray`` sync per call — the documented fold,
+now over per-span instead of per-chunk partials.  ``REPRO_PLAN_DEVICES``
+caps the device count (``1`` disables sharding); the ``devices`` ctor
+arg caps it per backend instance.
+
+Async dispatch (broker double-buffering)
+----------------------------------------
+``argmin_grid_many_async`` / ``hill_climb_ensemble_many_async`` enqueue
+every span program on device and return a zero-arg ``finalize`` closure
+that performs the single host sync and decodes results.  The broker's
+double-buffered flush waves are built on exactly this split: wave N's
+programs execute on device while the Selinger / FastRandomized drivers
+enumerate and submit wave N+1 (see ``repro.core.plan_broker``).  The
+numpy backend computes eagerly and defers only the return, keeping the
+wave machinery backend-uniform.
 """
 from __future__ import annotations
 
@@ -98,6 +130,12 @@ BatchCostFn = Callable[..., "np.ndarray"]
 Result = Tuple[Optional[Tuple[int, ...]], float]
 
 DEFAULT_CHUNK = 1 << 20
+
+# Stacked-scan chunk sizing (see _many_chunk): shards never shrink below
+# MIN_SHARD_ROWS rows, and the live per-dispatch cost block — (Q, chunk)
+# elements per device — never exceeds MAX_LIVE_ELEMENTS.
+MIN_SHARD_ROWS = 512
+MAX_LIVE_ELEMENTS = 1 << 22
 
 
 # ----------------------------- grid helpers -------------------------------- #
@@ -174,6 +212,30 @@ def _pad_even(n: int) -> int:
     programs — halves the distinct compiled batch shapes at <= one padded
     lane of waste (pow2 padding wastes up to ~2x work on odd sizes)."""
     return n + (n & 1)
+
+
+def _pad_multiple(n: int, m: int) -> int:
+    """Round ``n`` up to a multiple of ``m`` (the device-even padding for
+    sharded scans and request-axis-sharded climbs)."""
+    return -(-n // m) * m
+
+
+def _many_chunk(total: int, q: int, n_dev: int, chunk_size: int) -> int:
+    """Per-device rows per dispatch for a stacked Q-request grid scan.
+
+    The naive ``chunk_size // q`` floors to one-row shards for large Q,
+    which degenerates a sharded scan into pure dispatch overhead — so the
+    chunk is floored at ``MIN_SHARD_ROWS``, then capped so the live
+    per-dispatch cost block (``q * chunk`` elements per device) never
+    exceeds ``MAX_LIVE_ELEMENTS``, and finally clipped to the per-device
+    share ``ceil(total / n_dev)`` so one dispatch never pads past a full
+    grid sweep.  The argmin is invariant to chunking (strict-< fold), so
+    this only changes dispatch geometry, never results.
+    """
+    q = max(1, q)
+    chunk = max(chunk_size // q, MIN_SHARD_ROWS)
+    chunk = min(chunk, max(1, MAX_LIVE_ELEMENTS // q))
+    return int(min(chunk, -(-total // max(1, n_dev))))
 
 
 def _neighbor_offsets(n_dims: int) -> np.ndarray:
@@ -299,7 +361,7 @@ class NumpyPlanBackend:
             return []
         total = cluster.grid_size()
         p = pm.T[:, :, None]                      # params[k] -> (Q, 1)
-        chunk = max(1, chunk_size // Q)           # bounded memory: Q*chunk
+        chunk = _many_chunk(total, Q, 1, chunk_size)  # bounded: Q*chunk live
         best_cost = np.full(Q, np.inf)
         best_flat = np.full(Q, -1, dtype=np.int64)
         for lo in range(0, total, chunk):
@@ -335,6 +397,18 @@ class NumpyPlanBackend:
             n_random=n_random, seed=seed, max_iters=max_iters)
             for q in range(pm.shape[0])]
 
+    # -- async variants (double-buffered broker waves) ----------------------- #
+    # numpy is synchronous: compute eagerly and defer only the return, so
+    # the broker's wave machinery stays backend-uniform (and the wave
+    # commit order — hence cache contents — is identical across backends)
+    def argmin_grid_many_async(self, *args, **kwargs):
+        res = self.argmin_grid_many(*args, **kwargs)
+        return lambda: res
+
+    def hill_climb_ensemble_many_async(self, *args, **kwargs):
+        res = self.hill_climb_ensemble_many(*args, **kwargs)
+        return lambda: res
+
 
 # ------------------------------- jax backend ------------------------------- #
 
@@ -354,18 +428,27 @@ class JaxPlanBackend:
 
     MAX_PROGRAMS = 128                     # FIFO bound on compiled programs
 
-    def __init__(self, precision: str = "float32"):
+    def __init__(self, precision: str = "float32",
+                 devices: Optional[int] = None):
         import jax                         # noqa: F401 — fail fast if absent
         import jax.numpy as jnp
         if precision not in ("float32", "x64"):
             raise ValueError(f"unknown jax precision {precision!r} "
                              "(expected 'float32' or 'x64')")
+        try:                               # moved out of experimental in
+            from jax import shard_map      # newer jax releases
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
         self._jax = jax
         self.xp = jnp
+        self._shard_map = shard_map
         self.precision = precision
         self.exact = precision == "x64"
         self.name = "jax" if precision == "float32" else "jax_x64"
         self._programs = {}                # key -> (fn_ref, compiled)
+        self._devices = devices            # ctor cap on the plan mesh size
+        self._ndev: Optional[int] = None
+        self._mesh = None
 
     def _scope(self):
         """x64-scoped tracing/execution for precision="x64"; no-op else."""
@@ -373,6 +456,26 @@ class JaxPlanBackend:
             from jax.experimental import enable_x64
             return enable_x64()
         return contextlib.nullcontext()
+
+    # -- plan mesh ----------------------------------------------------------- #
+    def device_count(self) -> int:
+        """Devices the config axis is sharded over: the local device count
+        capped by REPRO_PLAN_DEVICES and the ``devices`` ctor arg.  1 means
+        the sharded paths are bypassed (legacy single-device programs)."""
+        if self._ndev is None:
+            from repro.launch.mesh import plan_device_count
+            n = plan_device_count()
+            if self._devices is not None:
+                n = min(n, max(1, int(self._devices)))
+            self._ndev = max(1, n)
+        return self._ndev
+
+    def _plan_mesh(self):
+        """The 1-D "plan" mesh sharded scan programs are built over."""
+        if self._mesh is None:
+            from repro.launch.mesh import plan_mesh
+            self._mesh = plan_mesh(self.device_count())
+        return self._mesh
 
     # -- program cache ------------------------------------------------------ #
     def _program(self, kind: str, fn: BatchCostFn,
@@ -400,20 +503,30 @@ class JaxPlanBackend:
         return self.xp.asarray([] if params is None else params, dtype=dtype)
 
     # -- chunked grid scan --------------------------------------------------- #
-    @hot_path("dispatches one compiled program per grid chunk per request")
+    @hot_path("dispatches one compiled program per grid span per request",
+              folds=2)
     def argmin_grid(self, batch_cost_fn: BatchCostFn,
                     cluster: ClusterConditions,
                     stats: Optional[PlanningStats] = None, *,
                     params=None, chunk_size: int = DEFAULT_CHUNK) -> Result:
-        """Chunk-scan the grid with one jitted program per chunk shape.
-        First-strict-minimum tie-breaking across chunks matches the numpy
-        backend; within a chunk jnp.argmin also returns the first min.
-        Chunk results stay on device until a single cross-chunk fold — one
-        host sync per call, not one per chunk."""
+        """Span-scan the grid with one jitted program per span shape.
+
+        With D local devices a span is ``D * chunk`` contiguous flat rows,
+        ``shard_map``-partitioned so every device reduces its own
+        ``chunk``-row shard to a ``(best_cost, best_flat)`` pair and the
+        cross-shard fold runs inside the program; with D == 1 this is the
+        legacy single-device chunk scan unchanged.  First-strict-minimum
+        tie-breaking matches the numpy backend everywhere: jnp.argmin
+        picks the first min within a shard, the lowest (= lowest-rows)
+        device across shards, and np.argmin the first span across spans.
+        Span results stay on device until a single cross-span fold — one
+        host sync per call, not one per span."""
         jax, jnp = self._jax, self.xp
         stats = stats if stats is not None else PlanningStats()
         total = cluster.grid_size()
-        chunk = int(min(chunk_size, total))
+        D = self.device_count()
+        chunk = int(min(chunk_size, _pad_multiple(total, D) // D))
+        span = chunk * D
         grids_np = grid_arrays(cluster)
         shape = tuple(len(g) for g in grids_np)
         has_params = params is not None
@@ -421,9 +534,7 @@ class JaxPlanBackend:
         def build():
             grids = [jnp.asarray(g) for g in grids_np]
 
-            @jax.jit
-            def scan_chunk(lo, p):
-                flat = lo + jnp.arange(chunk)
+            def shard_body(flat, p):
                 ok = flat < total
                 safe = jnp.where(ok, flat, 0)
                 idx = jnp.unravel_index(safe, shape)
@@ -433,21 +544,44 @@ class JaxPlanBackend:
                 costs = jnp.where(ok, costs, jnp.inf)
                 j = jnp.argmin(costs)
                 return costs[j], flat[j]
-            return scan_chunk
+
+            if D == 1:
+                @jax.jit
+                def scan_chunk(lo, p):
+                    return shard_body(lo + jnp.arange(chunk), p)
+                return scan_chunk
+
+            PS = jax.sharding.PartitionSpec
+            shard = self._shard_map(
+                lambda flat, p: tuple(r[None] for r in shard_body(flat, p)),
+                mesh=self._plan_mesh(),
+                in_specs=(PS("plan"), PS()),
+                out_specs=(PS("plan"), PS("plan")))
+
+            @jax.jit
+            def scan_span(lo, p):
+                # shards hold ascending contiguous flat ranges, so
+                # jnp.argmin over the (D,) per-shard bests (first minimum
+                # = lowest device = lowest rows) is the globally first
+                # strict minimum of the span
+                cs, fs = shard(lo + jnp.arange(span), p)
+                k = jnp.argmin(cs)
+                return cs[k], fs[k]
+            return scan_span
 
         with self._scope():
             prog = self._program("scan", batch_cost_fn, cluster,
-                                 (chunk, has_params), build)
+                                 (chunk, has_params, D), build)
             p = self._params(params)
-            chunk_costs, chunk_flats = [], []
-            for lo in range(0, total, chunk):
+            span_costs, span_flats = [], []
+            for lo in range(0, total, span):
                 c, f = prog(lo, p)          # async dispatch: no host sync
-                chunk_costs.append(c)
-                chunk_flats.append(f)
-                stats.configs_explored += min(chunk, total - lo)
-            costs = np.asarray(jnp.stack(chunk_costs))      # one sync
-            flats = np.asarray(jnp.stack(chunk_flats))
-        # np.argmin keeps the first (lowest-lo) chunk on ties — the same
+                span_costs.append(c)
+                span_flats.append(f)
+                stats.configs_explored += min(span, total - lo)
+            costs = np.asarray(jnp.stack(span_costs))       # one sync
+            flats = np.asarray(jnp.stack(span_flats))
+        # np.argmin keeps the first (lowest-lo) span on ties — the same
         # strict-< update order as the old sequential per-chunk fold
         k = int(np.argmin(costs))
         best_cost = float(costs[k])
@@ -456,78 +590,122 @@ class JaxPlanBackend:
         idx = np.unravel_index(int(flats[k]), shape)
         return tuple(int(g[i]) for g, i in zip(grids_np, idx)), best_cost
 
-    @hot_path("dispatches one compiled program per grid chunk per flush")
-    def argmin_grid_many(self, batch_cost_fn: BatchCostFn,
-                         cluster: ClusterConditions,
-                         params_many, *,
-                         stats: Optional[PlanningStats] = None,
-                         chunk_size: int = DEFAULT_CHUNK) -> List[Result]:
-        """Chunked grid scan for Q stacked requests as ONE vmapped jitted
-        program per chunk shape: config enumeration is hoisted out of the
-        ``jax.vmap`` (every lane scans the same grid rows), only the cost
-        evaluation is mapped over the ``(Q, P)`` params axis, and the
-        chunk shrinks to ``chunk_size // Q`` so per-dispatch work stays
-        constant as the batch grows (Q padded to even, so the compiled
-        shape set is halved at <= one wasted lane).  Chunk results stay
-        on device until the final cross-chunk argmin — one host sync per
-        call, not one per chunk — which together make the stacked scan
-        strictly cheaper per request than Q sequential scans."""
+    @hot_path("dispatches one compiled program per grid span per flush",
+              folds=3)  # params-normalizing asarray + the 2-site fold
+    def argmin_grid_many_async(self, batch_cost_fn: BatchCostFn,
+                               cluster: ClusterConditions,
+                               params_many, *,
+                               stats: Optional[PlanningStats] = None,
+                               chunk_size: int = DEFAULT_CHUNK
+                               ) -> Callable[[], List[Result]]:
+        """Dispatch the stacked scan for Q requests and return a zero-arg
+        ``finalize`` closure that performs the single host sync + decode.
+
+        One vmapped jitted program per span shape: config enumeration is
+        hoisted out of the ``jax.vmap`` (every lane scans the same grid
+        rows), only the cost evaluation is mapped over the ``(Q, P)``
+        params axis.  With D devices each span is ``D * chunk`` rows,
+        ``shard_map``-partitioned so every device reduces its shard to a
+        per-request ``(best_cost, best_flat)`` row and the cross-shard
+        fold (first minimum = lowest device = lowest rows) runs inside
+        the program.  Chunk sizing is ``_many_chunk`` (floored shards +
+        explicit live-memory cap — the old ``chunk_size // Q`` floored to
+        tiny chunks for large Q); Q is padded to even so the compiled
+        shape set is halved at <= one wasted lane.  Nothing syncs until
+        ``finalize()``, so the broker can dispatch wave N and keep
+        enumerating wave N+1 while it runs."""
         jax, jnp = self._jax, self.xp
         stats = stats if stats is not None else PlanningStats()
         pm = np.asarray(params_many, dtype=np.float64)
         Q, P = pm.shape
         if Q == 0:
-            return []
+            return lambda: []
         total = cluster.grid_size()
+        D = self.device_count()
         Qpad = _pad_even(Q)
-        chunk = int(min(max(1, chunk_size // Qpad), total))
+        chunk = _many_chunk(total, Qpad, D, chunk_size)
+        span = chunk * D
         grids_np = grid_arrays(cluster)
         shape = tuple(len(g) for g in grids_np)
 
         def build():
             grids = [jnp.asarray(g) for g in grids_np]
 
-            @jax.jit
-            def scan_chunk(lo, p):
-                flat = lo + jnp.arange(chunk)
+            def shard_body(flat, p):
                 ok = flat < total
                 safe = jnp.where(ok, flat, 0)
                 idx = jnp.unravel_index(safe, shape)
                 cfgs = jnp.stack([g[i] for g, i in zip(grids, idx)], axis=1)
                 costs = jax.vmap(lambda q: batch_cost_fn(cfgs, q))(p)
-                costs = jnp.where(ok[None, :], costs, jnp.inf)  # (Q, chunk)
+                costs = jnp.where(ok[None, :], costs, jnp.inf)  # (Q, rows)
                 j = jnp.argmin(costs, axis=1)
                 return jnp.take_along_axis(costs, j[:, None], 1)[:, 0], \
                     flat[j]
 
-            return scan_chunk
+            if D == 1:
+                @jax.jit
+                def scan_chunk(lo, p):
+                    return shard_body(lo + jnp.arange(chunk), p)
+                return scan_chunk
+
+            PS = jax.sharding.PartitionSpec
+            shard = self._shard_map(
+                lambda flat, p: tuple(r[None] for r in shard_body(flat, p)),
+                mesh=self._plan_mesh(),
+                in_specs=(PS("plan"), PS()),
+                out_specs=(PS("plan"), PS("plan")))
+
+            @jax.jit
+            def scan_span(lo, p):
+                cs, fs = shard(lo + jnp.arange(span), p)    # (D, Qpad)
+                # first minimum over the device axis = lowest device =
+                # lowest flat rows: the strict-< tie-break per request
+                k = jnp.argmin(cs, axis=0)
+                return (jnp.take_along_axis(cs, k[None, :], 0)[0],
+                        jnp.take_along_axis(fs, k[None, :], 0)[0])
+            return scan_span
 
         with self._scope():
             prog = self._program("scan_many", batch_cost_fn, cluster,
-                                 (chunk, Qpad, P), build)
+                                 (chunk, Qpad, P, D), build)
             p = self._params(np.pad(pm, ((0, Qpad - Q), (0, 0)),
                                     mode="edge"))
-            chunk_costs, chunk_flats = [], []
-            for lo in range(0, total, chunk):
+            span_costs, span_flats = [], []
+            for lo in range(0, total, span):
                 c, f = prog(lo, p)          # async dispatch: no host sync
-                chunk_costs.append(c)
-                chunk_flats.append(f)
-                stats.configs_explored += Q * min(chunk, total - lo)
-            costs = np.asarray(jnp.stack(chunk_costs))[:, :Q]   # one sync
-            flats = np.asarray(jnp.stack(chunk_flats))[:, :Q]   # (C, Q)
-        grids = grid_arrays(cluster)
-        # np.argmin keeps the first (lowest-lo) chunk on ties — the same
-        # strict-< update order as the sequential per-chunk loop
-        k = np.argmin(costs, axis=0)
-        out: List[Result] = []
-        for q in range(Q):
-            # plan-lint: allow(host-sync): costs is host numpy after the single batched sync above
-            c = float(costs[k[q], q])
-            if math.isinf(c):
-                out.append((None, math.inf))
-            else:
-                out.append((_decode_flat(grids, shape, flats[k[q], q]), c))
-        return out
+                span_costs.append(c)
+                span_flats.append(f)
+                stats.configs_explored += Q * min(span, total - lo)
+
+        def finalize() -> List[Result]:
+            with self._scope():
+                costs = np.asarray(jnp.stack(span_costs))[:, :Q]  # one sync
+                flats = np.asarray(jnp.stack(span_flats))[:, :Q]  # (C, Q)
+            # np.argmin keeps the first (lowest-lo) span on ties — the
+            # same strict-< update order as the sequential per-chunk loop
+            k = np.argmin(costs, axis=0)
+            out: List[Result] = []
+            for q in range(Q):
+                c = float(costs[k[q], q])
+                if math.isinf(c):
+                    out.append((None, math.inf))
+                else:
+                    out.append((_decode_flat(grids_np, shape,
+                                             flats[k[q], q]), c))
+            return out
+
+        return finalize
+
+    def argmin_grid_many(self, batch_cost_fn: BatchCostFn,
+                         cluster: ClusterConditions,
+                         params_many, *,
+                         stats: Optional[PlanningStats] = None,
+                         chunk_size: int = DEFAULT_CHUNK) -> List[Result]:
+        """Synchronous stacked scan: dispatch + finalize in one call (see
+        ``argmin_grid_many_async`` for the split the broker waves use)."""
+        return self.argmin_grid_many_async(
+            batch_cost_fn, cluster, params_many, stats=stats,
+            chunk_size=chunk_size)()
 
     # -- fused ensemble climb ------------------------------------------------ #
     def _climb_fn(self, batch_cost_fn: BatchCostFn, grids_np: List[np.ndarray],
@@ -583,7 +761,8 @@ class JaxPlanBackend:
 
         return climb
 
-    @hot_path("runs the fused whole-ensemble climb program per request")
+    @hot_path("runs the fused whole-ensemble climb program per request",
+              folds=2)
     def hill_climb_ensemble(self, batch_cost_fn: BatchCostFn,
                             cluster: ClusterConditions,
                             starts: Optional[Sequence[Sequence[int]]] = None,
@@ -616,7 +795,72 @@ class JaxPlanBackend:
         res = tuple(int(grids_np[d][idx[d]]) for d in range(n_dims))
         return res, float(cost)
 
-    @hot_path("runs the vmapped stacked-ensemble climb program per flush")
+    @hot_path("runs the vmapped stacked-ensemble climb program per flush",
+              folds=4)  # params-normalizing asarray + the 3-site fold
+    def hill_climb_ensemble_many_async(self, batch_cost_fn: BatchCostFn,
+                                       cluster: ClusterConditions,
+                                       params_many, *,
+                                       starts=None,
+                                       stats: Optional[PlanningStats] = None,
+                                       n_random: int = 0, seed: int = 0,
+                                       max_iters: int = 100_000
+                                       ) -> Callable[[], List[Result]]:
+        """Dispatch the stacked ensemble climb and return a zero-arg
+        ``finalize`` closure that performs the host sync + decode.
+
+        ONE ``jax.vmap``-ed jitted ``while_loop`` program (starts shared
+        across requests, the params axis mapped).  With D devices the
+        *request* axis is ``shard_map``-partitioned over the plan mesh —
+        Q padded to a multiple of max(2, D) — so each device climbs its
+        own request lanes; vmap lanes are independent (no collectives in
+        the climb), so per-request trajectories and results are identical
+        with the single-device program."""
+        jax, jnp = self._jax, self.xp
+        stats = stats if stats is not None else PlanningStats()
+        pm = np.asarray(params_many, dtype=np.float64)
+        Q, P = pm.shape
+        if Q == 0:
+            return lambda: []
+        grids_np = grid_arrays(cluster)
+        n_dims = len(grids_np)
+        cur0 = start_indices(cluster, starts, n_random, seed)
+        S = len(cur0)
+        D = self.device_count()
+        Qpad = _pad_multiple(Q, max(2, D))
+
+        def build():
+            climb = self._climb_fn(batch_cost_fn, grids_np, max_iters, True)
+            vm = jax.vmap(climb, in_axes=(None, 0))
+            if D == 1:
+                return jax.jit(vm)
+            PS = jax.sharding.PartitionSpec
+            # check_rep=False: shard_map has no replication rule for
+            # while_loop; every output is genuinely sharded over the
+            # request axis, so the check adds nothing here
+            return jax.jit(self._shard_map(
+                vm, mesh=self._plan_mesh(),
+                in_specs=(PS(), PS("plan")),
+                out_specs=(PS("plan"), PS("plan"), PS("plan")),
+                check_rep=False))
+
+        with self._scope():
+            prog = self._program("climb_many", batch_cost_fn, cluster,
+                                 (S, max_iters, Qpad, P, D), build)
+            p = self._params(np.pad(pm, ((0, Qpad - Q), (0, 0)),
+                                    mode="edge"))
+            idx_d, cost_d, n_eval_d = prog(jnp.asarray(cur0), p)
+
+        def finalize() -> List[Result]:
+            idx = np.asarray(idx_d)[:Q]
+            cost = np.asarray(cost_d)[:Q]
+            n_evals = np.asarray(n_eval_d)[:Q]
+            stats.configs_explored += Q * S + int(n_evals.sum())
+            return [(tuple(int(grids_np[d][idx[q, d]])
+                           for d in range(n_dims)), float(cost[q]))
+                    for q in range(Q)]
+
+        return finalize
+
     def hill_climb_ensemble_many(self, batch_cost_fn: BatchCostFn,
                                  cluster: ClusterConditions,
                                  params_many, *,
@@ -624,39 +868,11 @@ class JaxPlanBackend:
                                  stats: Optional[PlanningStats] = None,
                                  n_random: int = 0, seed: int = 0,
                                  max_iters: int = 100_000) -> List[Result]:
-        """Ensemble climbs for Q stacked requests as ONE ``jax.vmap``-ed
-        jitted ``while_loop`` program (starts shared across requests, the
-        params axis mapped; Q padded to even).  Per-request trajectories
-        are independent under vmap, so each request's local optimum
-        equals its per-request climb."""
-        jax, jnp = self._jax, self.xp
-        stats = stats if stats is not None else PlanningStats()
-        pm = np.asarray(params_many, dtype=np.float64)
-        Q, P = pm.shape
-        if Q == 0:
-            return []
-        grids_np = grid_arrays(cluster)
-        n_dims = len(grids_np)
-        cur0 = start_indices(cluster, starts, n_random, seed)
-        S = len(cur0)
-        Qpad = _pad_even(Q)
-
-        def build():
-            climb = self._climb_fn(batch_cost_fn, grids_np, max_iters, True)
-            return jax.jit(jax.vmap(climb, in_axes=(None, 0)))
-
-        with self._scope():
-            prog = self._program("climb_many", batch_cost_fn, cluster,
-                                 (S, max_iters, Qpad, P), build)
-            p = self._params(np.pad(pm, ((0, Qpad - Q), (0, 0)),
-                                    mode="edge"))
-            idx, cost, n_eval = prog(jnp.asarray(cur0), p)
-            idx = np.asarray(idx)[:Q]
-            cost = np.asarray(cost)[:Q]
-            n_evals = np.asarray(n_eval)[:Q]
-        stats.configs_explored += Q * S + int(n_evals.sum())
-        return [(tuple(int(grids_np[d][idx[q, d]]) for d in range(n_dims)),
-                 float(cost[q])) for q in range(Q)]
+        """Synchronous stacked climb: dispatch + finalize in one call (see
+        ``hill_climb_ensemble_many_async`` for the broker-wave split)."""
+        return self.hill_climb_ensemble_many_async(
+            batch_cost_fn, cluster, params_many, starts=starts, stats=stats,
+            n_random=n_random, seed=seed, max_iters=max_iters)()
 
 
 PlanBackend = Union[NumpyPlanBackend, JaxPlanBackend]

@@ -10,7 +10,11 @@ concurrent queries against ONE session planning broker
 (repro.core.plan_broker) — every query's base-level candidate costings
 are queued before any query resolves, so the first flush plans the whole
 batch's shared operators as stacked array programs and the broker's
-session memo / the resource-plan cache dedup the rest.
+session memo / the resource-plan cache dedup the rest.  With the
+double-buffered broker (the default) those base costings ride the first
+``flush_async`` wave of the leading query's Selinger run automatically:
+each DP level executes on device while the next level enumerates (see
+repro.core.selinger), no RAQO-level changes needed.
 """
 from __future__ import annotations
 

@@ -2,6 +2,18 @@
 per-operator resource planning via OperatorCosting (paper §VI-C: "we
 extended the getPlanCost method of our cost model to first perform the
 resource planning and then return the sub-plan cost").
+
+With a double-buffered broker (``PlanBroker.flush_async``) the DP levels
+*pipeline*: level N's stacked planning programs run on device while this
+driver enumerates level N+1's candidates.  That is possible because the
+planning inputs of a candidate join depend only on the table SETS being
+joined, not on which plan won the subset: a join's cardinality applies
+every internal edge's selectivity exactly once whatever the join tree,
+so ``rows``/``row_bytes`` (hence ``ss``/``ls``) of any subset are
+split-independent and a static cardinality stand-in enumerated one level
+ahead queues byte-identical requests.  Level existence matches too —
+``has_edge`` sees only table sets — so the prefetched wave is exactly
+the wave the sequential driver would have flushed, in the same order.
 """
 from __future__ import annotations
 
@@ -9,8 +21,33 @@ import itertools
 from typing import Dict, FrozenSet, Optional, Sequence
 
 from repro.core.plans import (IMPLS, OperatorCosting, PlanNode, has_edge,
-                              leaf)
+                              join_cardinality, leaf)
 from repro.core.schema import Schema
+
+
+def _queue_level(schema: Schema, tables: Sequence[str],
+                 costing: OperatorCosting, impls: Sequence[str],
+                 standin: Dict[FrozenSet[str], PlanNode],
+                 size: int) -> None:
+    """Queue every candidate costing of DP level ``size`` on the broker,
+    using cardinality stand-in nodes so the level can be enumerated
+    before the previous level's plans resolve (see module docstring).
+    Extends ``standin`` with this level's realizable subsets."""
+    new: Dict[FrozenSet[str], PlanNode] = {}
+    for combo in itertools.combinations(tables, size):
+        s = frozenset(combo)
+        for t in combo:
+            sub = standin.get(s - {t})
+            if sub is None:
+                continue
+            tleaf = standin[frozenset({t})]
+            if not has_edge(schema, sub, tleaf):
+                continue
+            costing.prefetch_join(schema, sub, tleaf, impls)
+            if s not in new:
+                rows, rb = join_cardinality(schema, sub, tleaf)
+                new[s] = PlanNode(tables=s, rows=rows, row_bytes=rb)
+    standin.update(new)
 
 
 def selinger_plan(schema: Schema, tables: Sequence[str],
@@ -39,9 +76,26 @@ def selinger_plan(schema: Schema, tables: Sequence[str],
     if n == 1:
         return best[frozenset(tables)]
 
+    # double-buffered pipeline: with flush_async, level N's programs run
+    # on device while level N+1 enumerates (cardinality stand-ins make
+    # the one-level lookahead exact — module docstring); otherwise keep
+    # the historical queue-then-flush-per-level behavior
+    pipelined = costing.broker is not None \
+        and hasattr(costing.broker, "flush_async")
+    if pipelined:
+        standin = {frozenset({t}): best[frozenset({t})] for t in tables}
+        _queue_level(schema, tables, costing, impls, standin, 2)
+        costing.broker.flush_async()        # dispatch level 2
     for size in range(2, n + 1):
         combos = list(itertools.combinations(tables, size))
-        if costing.broker is not None:
+        if pipelined:
+            if size < n:                    # enumerate the NEXT level
+                _queue_level(schema, tables, costing, impls, standin,
+                             size + 1)
+            # commit level ``size`` (in flight until now), dispatch the
+            # next one; the consume loop below then reads resolved futures
+            costing.broker.flush_async()
+        elif costing.broker is not None:
             # batch the whole enumeration level: queue every candidate
             # join's costings (both operator implementations) on the
             # session broker, so the first resolve below flushes the

@@ -75,6 +75,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+try:                                       # moved out of experimental in
+    from jax import shard_map              # newer jax releases
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
 from repro.analysis.registry import hot_path
 from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.planning_backend import (  # noqa: F401 (re-exported types)
@@ -350,6 +355,74 @@ def build_scan(fn: BatchCostFn, cluster: ClusterConditions, *, block: int,
     return jax.jit(lambda p: call(p, *const_ins))
 
 
+def _scan_kernel_dyn(off_ref, params_ref, *refs, cost, shapes, metas,
+                     sizes, total, block, masked, grid_axis):
+    """``_scan_kernel`` with the chunk offset as a traced ``(1,)`` input
+    instead of a static ``lo0``: the sharded dispatch path feeds every
+    device its own offset through ``shard_map``, so ONE executable serves
+    every shard of the mesh."""
+    _scan_kernel(params_ref, *refs, cost=cost, shapes=shapes, metas=metas,
+                 sizes=sizes, total=total, block=block, lo0=off_ref[0],
+                 masked=masked, grid_axis=grid_axis)
+
+
+@hot_path("builds the sharded scan program one dispatch spreads over the mesh")
+def build_scan_sharded(fn: BatchCostFn, cluster: ClusterConditions, *,
+                       block: int, nb_shard: int, n_dev: int,
+                       has_params: bool, p_width: int, mesh,
+                       interpret: bool):
+    """Jitted fused scan ``scan(params) -> (cost, flat)`` over the whole
+    grid, partitioned across ``n_dev`` devices: each device runs the SAME
+    single executable over its own ``nb_shard * block``-row span (its
+    start offset arriving as a traced scalar through ``shard_map``),
+    carrying its per-shard (best_cost, best_idx) accumulator exactly like
+    the unsharded kernel.  The cross-shard fold — ``jnp.argmin`` over the
+    ``(n_dev,)`` per-shard bests, first minimum = lowest device = lowest
+    flat rows (spans are contiguous and ascending) — happens inside the
+    program, so the result is bit-identical to the single-device scan and
+    ONE host sync reads it back.  Every block is masked (``flat < total``)
+    because one uniform executable must also cover the ragged last
+    shard."""
+    cost, const_ins, shapes = _split_cost_fn(
+        fn, block, cluster.n_dims, p_width, has_params)
+    kernel = functools.partial(
+        _scan_kernel_dyn, cost=cost, shapes=shapes, metas=_dim_meta(cluster),
+        sizes=_dim_sizes(cluster), total=cluster.grid_size(), block=block,
+        masked=True, grid_axis=0)
+    call = pl.pallas_call(
+        kernel,
+        grid=(nb_shard,),
+        in_specs=[pl.BlockSpec((1,), lambda b: (0,)),
+                  pl.BlockSpec((1, p_width), lambda b: (0, 0))]
+        + _const_specs(const_ins),
+        out_specs=[pl.BlockSpec((1, 1), lambda b: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda b: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=interpret,
+    )
+    PS = jax.sharding.PartitionSpec
+
+    def shard_body(off, p):
+        c, f = call(off, p, *const_ins)
+        return c[0], f[0]                      # one (1,) row per shard
+
+    # check_rep=False: there is no replication rule for pallas_call, and
+    # both outputs are genuinely sharded over "plan" anyway
+    shard = shard_map(shard_body, mesh=mesh,
+                      in_specs=(PS("plan"), PS()),
+                      out_specs=(PS("plan"), PS("plan")),
+                      check_rep=False)
+    offs = jnp.arange(n_dev, dtype=jnp.int32) * (nb_shard * block)
+
+    def run(p):
+        cs, fs = shard(offs, p)
+        k = jnp.argmin(cs)                     # first min: lowest device
+        return cs[k], fs[k]
+
+    return jax.jit(run)
+
+
 @hot_path("builds the stacked scan program a flush runs per block chunk")
 def build_scan_many_unrolled(fn: BatchCostFn, cluster: ClusterConditions, *,
                              block: int, nb: int, nq: int, lo0: int,
@@ -428,12 +501,27 @@ class PallasPlanBackend(JaxPlanBackend):
     per chunk.  ``many_variant`` selects the stacked-scan kernel: the
     2-D (query, block) grid (TPU default) or the query-unrolled block
     body (interpret default); "grid2d"/"unrolled" force one for tests.
+
+    Multi-device sharding (>1 plan devices, see ``launch.mesh``): the
+    per-chunk single-block executables of the interpret paths round-robin
+    over the plan mesh — params are pre-placed on every device so chunk i
+    dispatches on device ``i % D``, and the per-chunk winners hop back to
+    device 0 (async copies) before the single stacked fold, which stays
+    the one host sync.  The compiled single-request path instead builds
+    ONE sharded executable (``build_scan_sharded``): per-device offsets
+    travel through ``shard_map`` and the cross-shard fold runs in-program.
+    ``shard_variant`` forces a strategy ("roundrobin"/"shardmap"/"off");
+    "auto" picks round-robin under interpret, shard_map when compiled.
+    Neither changes results: spans stay contiguous/ascending so the fold
+    is still first-strict-minimum in ``enumerate_configs`` order.
     """
 
     def __init__(self, *, block: Optional[int] = None,
                  interpret: Optional[bool] = None,
-                 many_variant: str = "auto"):
-        super().__init__(precision="float32")
+                 many_variant: str = "auto",
+                 devices: Optional[int] = None,
+                 shard_variant: str = "auto"):
+        super().__init__(precision="float32", devices=devices)
         self.name = "pallas"
         self.interpret = (jax.default_backend() != "tpu") \
             if interpret is None else bool(interpret)
@@ -442,6 +530,9 @@ class PallasPlanBackend(JaxPlanBackend):
         if many_variant not in ("auto", "grid2d", "unrolled"):
             raise ValueError(f"unknown many_variant {many_variant!r}")
         self.many_variant = many_variant
+        if shard_variant not in ("auto", "roundrobin", "shardmap", "off"):
+            raise ValueError(f"unknown shard_variant {shard_variant!r}")
+        self.shard_variant = shard_variant
 
     # -- helpers ------------------------------------------------------------- #
 
@@ -449,6 +540,26 @@ class PallasPlanBackend(JaxPlanBackend):
         if self.many_variant == "auto":
             return self.interpret
         return self.many_variant == "unrolled"
+
+    def _shard_mode(self) -> str:
+        """Resolved multi-device dispatch strategy.  "roundrobin" spreads
+        the per-chunk executables over the mesh (interpret default —
+        distinct executables already dispatch async); "shardmap" runs one
+        sharded executable with traced per-device offsets (compiled
+        default; forcible under interpret so CI covers the kernel); "off"
+        is the single-device geometry."""
+        if self.device_count() == 1 or self.shard_variant == "off":
+            return "off"
+        if self.shard_variant == "auto":
+            return "roundrobin" if self.interpret else "shardmap"
+        if self.shard_variant == "roundrobin" and not self.interpret:
+            return "shardmap"  # per-chunk executables only exist interpreted
+        return self.shard_variant
+
+    def _scan_devices(self):
+        """Devices the round-robin chunk dispatch cycles over — the plan
+        mesh's devices, in mesh (= flat-row) order."""
+        return jax.local_devices()[:self.device_count()]
 
     def _params32(self, params, p_width: int) -> jnp.ndarray:
         p = np.zeros((1, p_width), dtype=np.float32)
@@ -467,7 +578,8 @@ class PallasPlanBackend(JaxPlanBackend):
 
     # -- fused grid scan ------------------------------------------------------ #
 
-    @hot_path("dispatches one fused kernel program per block chunk per request")
+    @hot_path("dispatches one fused kernel program per block chunk per "
+              "request", folds=4)
     def argmin_grid(self, batch_cost_fn: BatchCostFn,
                     cluster: ClusterConditions,
                     stats: Optional[PlanningStats] = None, *,
@@ -489,14 +601,21 @@ class PallasPlanBackend(JaxPlanBackend):
         p_width = max(1, 0 if params is None else np.size(params))
         p = self._params32(params, p_width)
         stats.configs_explored += total
+        mode = self._shard_mode()
 
-        if self.interpret:
+        if self.interpret and mode != "shardmap":
             # one single-block executable per chunk, lo baked statically:
             # distinct executables dispatch async and run CONCURRENTLY on
             # XLA:CPU (a multi-step interpret grid would serialize), with
-            # one host sync folding the per-chunk winners at the end
+            # one host sync folding the per-chunk winners at the end.
+            # With >1 plan devices the chunks round-robin over the mesh
+            # (params pre-placed per device; winners hop back to device 0
+            # as async copies before the fold — same single sync).
+            devs = self._scan_devices()
+            rr = mode == "roundrobin" and len(devs) > 1
+            ps = [jax.device_put(p, d) for d in devs] if rr else [p]
             outs = []
-            for lo in range(0, total, block):
+            for i, lo in enumerate(range(0, total, block)):
                 tail = lo + block > total
                 prog = self._program(
                     "pscan", batch_cost_fn, cluster,
@@ -505,11 +624,31 @@ class PallasPlanBackend(JaxPlanBackend):
                         batch_cost_fn, cluster, block=block, nb=1, nq=0,
                         lo0=lo, has_params=has_params, p_width=p_width,
                         masked=t, interpret=True))
-                outs.append(prog(p))
+                outs.append(prog(ps[i % len(ps)]))
+            if rr:
+                d0 = devs[0]
+                outs = [(jax.device_put(c, d0), jax.device_put(f, d0))
+                        for c, f in outs]
             costs = np.asarray(jnp.stack([c for c, _ in outs]))[:, 0, 0]
             flats = np.asarray(jnp.stack([f for _, f in outs]))[:, 0, 0]
             k = int(np.argmin(costs))         # first min: lowest-lo chunk
             return self._result(cluster, int(flats[k]), float(costs[k]))
+
+        if mode == "shardmap":
+            # one sharded executable covering the whole grid: per-device
+            # offsets travel through shard_map, the cross-shard fold runs
+            # in-program, and this float()/int() pair is the single sync
+            D = self.device_count()
+            nbs = -(-total // (block * D))    # blocks per shard
+            prog = self._program(
+                "pscan_sh", batch_cost_fn, cluster,
+                (block, nbs, D, has_params, p_width, self.interpret),
+                lambda: build_scan_sharded(
+                    batch_cost_fn, cluster, block=block, nb_shard=nbs,
+                    n_dev=D, has_params=has_params, p_width=p_width,
+                    mesh=self._plan_mesh(), interpret=self.interpret))
+            c, f = prog(p)
+            return self._result(cluster, int(f), float(c))
 
         nb = -(-total // block)
         prog = self._program(
@@ -522,39 +661,47 @@ class PallasPlanBackend(JaxPlanBackend):
         c, f = prog(p)
         return self._result(cluster, int(f[0, 0]), float(c[0, 0]))
 
-    @hot_path("dispatches the stacked fused-kernel scan per flush")
-    def argmin_grid_many(self, batch_cost_fn: BatchCostFn,
-                         cluster: ClusterConditions,
-                         params_many, *,
-                         stats: Optional[PlanningStats] = None,
-                         chunk_size: int = DEFAULT_CHUNK) -> List[Result]:
+    @hot_path("dispatches the stacked fused-kernel scan per flush",
+              folds=5)  # params asarray + 2-site fold per many variant
+    def argmin_grid_many_async(self, batch_cost_fn: BatchCostFn,
+                               cluster: ClusterConditions,
+                               params_many, *,
+                               stats: Optional[PlanningStats] = None,
+                               chunk_size: int = DEFAULT_CHUNK):
         """Stacked scan for Q requests sharing one cost fn and grid —
         the (Q, P) params form as a 2-D grid over (query, block) (or the
         query-unrolled interpret variant); per-request results identical
         to Q sequential ``argmin_grid`` calls.  Like the jax backend, Q
         is padded to even (last row repeated, results sliced off), so a
         session whose flush-group sizes fluctuate compiles half as many
-        distinct batch shapes at <= one wasted lane."""
+        distinct batch shapes at <= one wasted lane.
+
+        Dispatch/finalize split (see ``JaxPlanBackend``): this method
+        only dispatches the kernels — the returned zero-arg finalize does
+        the single host sync and decode, so a double-buffered broker
+        flush can keep enumerating while the wave runs.  Round-robin
+        device dispatch applies to the per-chunk unrolled path exactly as
+        in ``argmin_grid``; the compiled 2-D grid path stays one program
+        (its per-query carried accumulators are already a single
+        dispatch)."""
         stats = stats if stats is not None else PlanningStats()
         pm = np.asarray(params_many, dtype=np.float64)
         Q, P = pm.shape
         if Q == 0:
-            return []
+            return lambda: []
         total = cluster.grid_size()
         if total == 0:
-            return [(None, math.inf)] * Q
+            res = [(None, math.inf)] * Q
+            return lambda: res
         if total > MAX_FLAT - self.block:     # tail padding must not wrap
-            return super().argmin_grid_many(batch_cost_fn, cluster, pm,
-                                            stats=stats,
-                                            chunk_size=chunk_size)
+            return super().argmin_grid_many_async(batch_cost_fn, cluster,
+                                                  pm, stats=stats,
+                                                  chunk_size=chunk_size)
         if Q > UNROLL_Q and self._use_unrolled():
-            out = []
-            for lo in range(0, Q, UNROLL_Q):
-                out += self.argmin_grid_many(batch_cost_fn, cluster,
-                                             pm[lo:lo + UNROLL_Q],
-                                             stats=stats,
-                                             chunk_size=chunk_size)
-            return out
+            fins = [self.argmin_grid_many_async(
+                batch_cost_fn, cluster, pm[lo:lo + UNROLL_Q], stats=stats,
+                chunk_size=chunk_size) for lo in range(0, Q, UNROLL_Q)]
+            return lambda: [r for fin in fins for r in fin()]
         block = int(min(self.block, total))
         p_width = max(1, P)
         Qpad = _pad_even(Q)
@@ -564,8 +711,11 @@ class PallasPlanBackend(JaxPlanBackend):
         stats.configs_explored += Q * total
 
         if self._use_unrolled():
+            devs = self._scan_devices()
+            rr = self._shard_mode() != "off" and len(devs) > 1
+            ps = [jax.device_put(p, d) for d in devs] if rr else [p]
             outs = []
-            for lo in range(0, total, block):
+            for i, lo in enumerate(range(0, total, block)):
                 tail = lo + block > total
                 prog = self._program(
                     "pscan_many_u", batch_cost_fn, cluster,
@@ -574,24 +724,38 @@ class PallasPlanBackend(JaxPlanBackend):
                         batch_cost_fn, cluster, block=block, nb=1,
                         nq=Qpad, lo0=lo, p_width=p_width, masked=t,
                         interpret=self.interpret))
-                outs.append(prog(p))
-            costs = np.asarray(jnp.stack([c for c, _ in outs]))[:, :Q]
-            flats = np.asarray(jnp.stack([f for _, f in outs]))[:, :Q]
-        else:
-            nb = -(-total // block)
-            prog = self._program(
-                "pscan_many", batch_cost_fn, cluster,
-                (block, nb, Qpad, 0, p_width, True, self.interpret),
-                lambda: build_scan(
-                    batch_cost_fn, cluster, block=block, nb=nb, nq=Qpad,
-                    lo0=0, has_params=True, p_width=p_width, masked=True,
-                    interpret=self.interpret))
-            c, f = prog(p)
+                outs.append(prog(ps[i % len(ps)]))
+            if rr:
+                d0 = devs[0]
+                outs = [(jax.device_put(c, d0), jax.device_put(f, d0))
+                        for c, f in outs]
+
+            def finalize() -> List[Result]:
+                costs = np.asarray(jnp.stack([c for c, _ in outs]))[:, :Q]
+                flats = np.asarray(jnp.stack([f for _, f in outs]))[:, :Q]
+                k = np.argmin(costs, axis=0)  # first min: lowest-lo chunk
+                return [self._result(cluster, int(flats[k[q], q]),
+                                     float(costs[k[q], q]))
+                        for q in range(Q)]
+            return finalize
+
+        nb = -(-total // block)
+        prog = self._program(
+            "pscan_many", batch_cost_fn, cluster,
+            (block, nb, Qpad, 0, p_width, True, self.interpret),
+            lambda: build_scan(
+                batch_cost_fn, cluster, block=block, nb=nb, nq=Qpad,
+                lo0=0, has_params=True, p_width=p_width, masked=True,
+                interpret=self.interpret))
+        c, f = prog(p)
+
+        def finalize() -> List[Result]:
             costs = np.asarray(c).reshape(1, Qpad)[:, :Q]
             flats = np.asarray(f).reshape(1, Qpad)[:, :Q]
-        k = np.argmin(costs, axis=0)          # first min: lowest-lo chunk
-        return [self._result(cluster, int(flats[k[q], q]),
-                             float(costs[k[q], q])) for q in range(Q)]
+            k = np.argmin(costs, axis=0)
+            return [self._result(cluster, int(flats[k[q], q]),
+                                 float(costs[k[q], q])) for q in range(Q)]
+        return finalize
 
     # -- ensemble climb on the fused neighbor step ---------------------------- #
 
@@ -664,3 +828,10 @@ class PallasPlanBackend(JaxPlanBackend):
             batch_cost_fn, cluster, starts, stats, params=pm[q],
             n_random=n_random, seed=seed, max_iters=max_iters)
             for q in range(pm.shape[0])]
+
+    def hill_climb_ensemble_many_async(self, *args, **kwargs):
+        """The pallas climb is host-driven — every fused neighbor step
+        syncs before the move decision — so there is nothing to leave in
+        flight: run eagerly, return the results as a finalized closure."""
+        res = self.hill_climb_ensemble_many(*args, **kwargs)
+        return lambda: res

@@ -94,6 +94,23 @@ def hot_allowed_fold(values):
     return float(values[0])
 
 
+@hot_path("fixture: two depth-zero syncs against a folds=1 budget",
+          folds=1)
+def hot_over_budget(a, b):
+    ca = np.asarray(a)
+    cb = np.asarray(b)
+    return ca, cb
+
+
+@hot_path("fixture: synced host matrix decoded in a loop", folds=1)
+def hot_host_tracked_decode(device_costs):
+    costs = np.asarray(device_costs)
+    out = []
+    for q in range(3):
+        out.append(float(costs[q]))
+    return out
+
+
 def cold_loop_sync(values):
     """Not @hot_path: identical syncs must NOT be flagged here."""
     return [float(v) for v in values]

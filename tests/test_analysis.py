@@ -14,7 +14,9 @@ from repro.analysis.hotpath_lint import lint_file, lint_tree
 from repro.analysis.jaxpr_lint import lint_cost_fn, lint_registered
 from repro.analysis.recompile_audit import (EXPECTED_COMPILE_COUNTS, PROBES,
                                             audit_source, audit_sources,
-                                            compare_counts, fresh_backend,
+                                            compare_counts,
+                                            expected_compile_counts,
+                                            fresh_backend, plan_devices,
                                             run_probes, table_hash)
 from repro.analysis.registry import hot_path, iter_cost_surfaces
 from repro.analysis.report import (Finding, apply_pragmas, parse_pragmas,
@@ -143,6 +145,29 @@ def test_cold_function_not_linted(hot_findings):
     assert not [f for f in hot_findings if f.obj == "cold_loop_sync"]
 
 
+def test_sync_budget_overrun_warns_at_fn_head(hot_findings):
+    """Two depth-zero syncs against folds=1 -> one sync-budget warn at
+    the function head (plus the two underlying host-sync infos)."""
+    line = fixture_line("def hot_over_budget(a, b):")
+    fs = [f for f in hot_findings if f.obj == "hot_over_budget"]
+    infos = [f for f in fs if f.rule == "host-sync"]
+    assert len(infos) == 2
+    assert all(f.severity == "info" for f in infos)
+    f = only([f for f in fs if f.rule == "sync-budget"])
+    assert (f.severity, f.line) == ("warn", line)
+    assert "folds=1" in f.message
+
+
+def test_host_tracked_decode_stays_in_budget(hot_findings):
+    """float() on a name assigned from np.asarray is a free host read,
+    not a device sync: only the asarray itself is flagged, the in-loop
+    decode is silent, and the folds=1 budget holds."""
+    fs = [f for f in hot_findings if f.obj == "hot_host_tracked_decode"]
+    f = only(fs)
+    assert (f.rule, f.severity) == ("host-sync", "info")
+    assert "asarray" in f.message
+
+
 def test_reasonless_pragma_flagged(hot_findings):
     line = fixture_line("# plan-lint: allow(host-sync)", exact=True)
     f = only([f for f in hot_findings if f.rule == "pragma-no-reason"])
@@ -222,20 +247,45 @@ def test_shipped_backend_sources_are_keyed():
 # ------------------- pass 2 (dynamic): recompile audit --------------------- #
 
 def test_compare_counts_churn_and_stale():
+    # explicit expected table: device-count independent on purpose
     exp = EXPECTED_COMPILE_COUNTS["jax"]
     churn = dict(exp)
     churn[PROBES[0]] += 1
-    f = only(compare_counts("jax", churn))
+    f = only(compare_counts("jax", churn, exp))
     assert (f.rule, f.severity) == ("recompile-churn", "error")
     assert f.obj == f"jax.{PROBES[0]}"
 
     reuse = next(p for p in PROBES if exp[p] >= 1)
     stale = dict(exp)
     stale[reuse] -= 1
-    f = only(compare_counts("jax", stale))
+    f = only(compare_counts("jax", stale, exp))
     assert (f.rule, f.severity) == ("stale-program", "error")
 
-    assert compare_counts("jax", dict(exp)) == []
+    assert compare_counts("jax", dict(exp), exp) == []
+
+
+def test_expected_counts_one_device_matches_legacy_table():
+    for name in EXPECTED_COMPILE_COUNTS:
+        assert expected_compile_counts(name, 1) \
+            == EXPECTED_COMPILE_COUNTS[name], name
+
+
+def test_expected_counts_eight_devices_collapse_geometry_classes():
+    """Device-even padding is a memo-key component: at D=8 the churn
+    probe's {8, 4} chunk sweep clips to one per-device share and the
+    climb Q sweep pads to one class of 8, while Qpad still splits the
+    stacked scan three ways.  Pure geometry — no jax needed."""
+    exp = expected_compile_counts("jax", 8)
+    assert exp["scan_chunk_churn"] == 1
+    assert exp["climb_many_qpad"] == 1
+    assert exp["scan_many_qpad"] == 3
+    assert exp["grid_rekey"] == 2
+    assert expected_compile_counts("jax_x64", 8) == exp
+    # pallas round-robin dispatch never touches the program memo keys
+    assert expected_compile_counts("pallas", 8) \
+        == expected_compile_counts("pallas", 1)
+    assert expected_compile_counts("numpy", 8) \
+        == EXPECTED_COMPILE_COUNTS["numpy"]
 
 
 def test_numpy_backend_never_compiles():
@@ -247,7 +297,7 @@ def test_numpy_backend_never_compiles():
 def test_jax_backend_compile_counts_match_contract():
     pytest.importorskip("jax")
     counts = run_probes(fresh_backend("jax"))
-    assert counts == EXPECTED_COMPILE_COUNTS["jax"]
+    assert counts == expected_compile_counts("jax", plan_devices())
 
 
 def test_table_hash_is_stable_and_sensitive():
