@@ -65,6 +65,7 @@ from repro.core.hillclimb import brute_force, hill_climb, hill_climb_multi
 from repro.core.plan_broker import PlanBroker
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.plans import OperatorCosting
+from repro.core.raqo import RAQO
 from repro.core.schema import random_query, random_schema
 from repro.core.selinger import selinger_plan
 
@@ -624,7 +625,7 @@ def overlap_table(quick: bool = False) -> Tuple[List[Row], dict]:
                 "operators": 4 * n_q, "configs": cluster.grid_size(),
                 "host_cpus": os.cpu_count() or 1})
     shared_fns: dict = {}             # compiled programs shared, as RAQO does
-    sigs, times = {}, {}
+    sigs, times, geom = {}, {}, {}
     repeats = 1 if quick else 3
     for label, dbl in (("serial", False), ("async", True)):
         best = math.inf
@@ -639,8 +640,11 @@ def overlap_table(quick: bool = False) -> Tuple[List[Row], dict]:
             t0 = time.perf_counter()
             plans = [selinger_plan(schema, q, costing) for q in queries]
             best = min(best, time.perf_counter() - t0)
+            geom[label] = broker.counters_snapshot()
         sigs[label] = [_plan_sig(p) for p in plans]
         times[label] = best
+    out["async_waves"] = geom["async"]["waves"]
+    out["async_mean_wave"] = geom["async"]["mean_wave"]
     out["serial_s"], out["async_s"] = times["serial"], times["async"]
     out["speedup_x"] = times["serial"] / times["async"]
     out["identical"] = float(sigs["async"] == sigs["serial"])
@@ -654,6 +658,93 @@ def overlap_table(quick: bool = False) -> Tuple[List[Row], dict]:
          f"core; this host has {out['host_cpus']})"),
         ("resplan.overlap.identical", out["identical"],
          "double-buffered plans == serial plans (1 = identical)"),
+        ("resplan.overlap.async_waves", float(out["async_waves"]),
+         "flush waves across the per-query batch (double-buffered)"),
+        ("resplan.overlap.async_mean_wave", out["async_mean_wave"],
+         "broker requests per double-buffered wave"),
+    ]
+    return rows, out
+
+
+# ----- lockstep cross-query Selinger (one wave per DP level) ---------------- #
+
+def lockstep_table(quick: bool = False) -> Tuple[List[Row], dict]:
+    """Lockstep cross-query planning (``RAQO.plan_queries`` default) vs
+    the per-query double-buffered pipeline (``lockstep=False``) on the
+    8-query / 32-operator Selinger workload: every in-flight query's DP
+    level L is queued before ONE shared flush, so each wave is a single
+    stacked (sum Q_L, P) program per (cost-fn, grid) group instead of Q
+    small ones.  A second, 64-query recurring workload (8 templates x 8
+    arrivals, the paper's §V recurring-job story) stresses the broker
+    memo + base-candidate fan-out at batch width.  Plans must be
+    bit-identical either way (asserted by main()); the wall-clock win is
+    gated only on multi-core hosts (dispatch overlap needs spare cores)."""
+    rows: List[Row] = []
+    out: dict = {}
+    be = "jax" if "jax" in _backends() else "numpy"
+    schema = random_schema(10, seed=0)
+    n_q = 4 if quick else 8
+    queries = [random_query(schema, 5, seed=q) for q in range(n_q)]
+    cluster = scaled_cluster(1_000, 20) if quick \
+        else scaled_cluster(100_000, 100)
+    out.update({"backend": be, "queries": n_q, "operators": 4 * n_q,
+                "configs": cluster.grid_size(),
+                "host_cpus": os.cpu_count() or 1})
+    raqo = RAQO(schema, cluster=cluster, resource_planning="batched",
+                backend=be)                 # shared compiled-program caches
+    repeats = 1 if quick else 3
+    sigs, times, geom = {}, {}, {}
+    for label, lockstep in (("per_query", False), ("lockstep", True)):
+        best = math.inf
+        plans: list = []
+        for _ in range(repeats + 1):        # first repeat pays jit compile
+            raqo.broker = PlanBroker(backend=be)    # fresh memo + counters
+            t0 = time.perf_counter()
+            plans = raqo.plan_queries(queries, lockstep=lockstep)
+            best = min(best, time.perf_counter() - t0)
+        sigs[label] = [_plan_sig(jp.plan) for jp in plans]
+        times[label] = best
+        geom[label] = raqo.broker.counters_snapshot()
+    out["per_query_s"], out["lockstep_s"] = \
+        times["per_query"], times["lockstep"]
+    out["speedup_x"] = times["per_query"] / times["lockstep"]
+    out["identical"] = float(sigs["lockstep"] == sigs["per_query"])
+    out.update({"waves": geom["lockstep"]["waves"],
+                "mean_wave": geom["lockstep"]["mean_wave"],
+                "max_wave": geom["lockstep"]["max_wave"],
+                "per_query_waves": geom["per_query"]["waves"]})
+    # recurring batch: lockstep stacks 64 queries' levels into the same
+    # handful of waves; the per-query baseline pays 64 wave trains
+    n_r = 16 if quick else 64
+    recurring = [random_query(schema, 4, seed=q % 8) for q in range(n_r)]
+    rec: dict = {}
+    for label, lockstep in (("per_query", False), ("lockstep", True)):
+        raqo.broker = PlanBroker(backend=be)
+        t0 = time.perf_counter()
+        raqo.plan_queries(recurring, lockstep=lockstep)
+        rec[label] = time.perf_counter() - t0
+    out["recurring_queries"] = n_r
+    out["recurring_per_query_s"] = rec["per_query"]
+    out["recurring_lockstep_s"] = rec["lockstep"]
+    out["recurring_speedup_x"] = rec["per_query"] / rec["lockstep"]
+    rows += [
+        ("resplan.lockstep.per_query_s", out["per_query_s"],
+         f"{n_q}-query Selinger batch, per-query pipelined waves ({be})"),
+        ("resplan.lockstep.lockstep_s", out["lockstep_s"],
+         f"{n_q}-query batch, one wave per DP level across queries ({be})"),
+        ("resplan.lockstep.speedup_x", out["speedup_x"],
+         "per-query / lockstep wall-clock (gated >= 1.5x on multi-core "
+         f"hosts; this host has {out['host_cpus']})"),
+        ("resplan.lockstep.identical", out["identical"],
+         "lockstep plans == per-query plans (1 = identical)"),
+        ("resplan.lockstep.waves", float(out["waves"]),
+         f"lockstep flush waves (per-query: {out['per_query_waves']})"),
+        ("resplan.lockstep.mean_wave", out["mean_wave"],
+         "broker requests per lockstep wave"),
+        ("resplan.lockstep.max_wave", float(out["max_wave"]),
+         "widest stacked wave (requests)"),
+        ("resplan.lockstep.recurring_speedup_x", out["recurring_speedup_x"],
+         f"{n_r} recurring queries (8 templates), per-query / lockstep"),
     ]
     return rows, out
 
@@ -669,16 +760,17 @@ def run(quick: bool = False) -> List[Row]:
     rows4, mq = multi_query(quick)
     rows6, shard = sharded_table(quick)
     rows7, overlap = overlap_table(quick)
+    rows8, lock = lockstep_table(quick)
     if quick:
         # CI smoke: shrunken grids must not overwrite the tracked JSON or
         # pollute the cross-PR history trend with incomparable numbers
-        return rows1 + rows2 + rows3 + rows5 + rows4 + rows6 + rows7
+        return rows1 + rows2 + rows3 + rows5 + rows4 + rows6 + rows7 + rows8
     out = Path(__file__).resolve().parent.parent / \
         "BENCH_resource_planning.json"
     payload = {"operator": OPERATOR, "paper_cluster_100x10": tab,
                "scaled_cluster_100000x100": scale, "backends": backends,
                "pallas": pallas, "multi_query": mq, "sharded": shard,
-               "overlap": overlap}
+               "overlap": overlap, "lockstep": lock}
     # append this run's summary to the cross-PR trajectory (--report mode
     # of benchmarks/run.py renders the trend)
     history = []
@@ -713,9 +805,19 @@ def run(quick: bool = False) -> List[Row]:
         snapshot["mq_overlap_serial_s"] = overlap["serial_s"]
         snapshot["mq_overlap_async_s"] = overlap["async_s"]
         snapshot["mq_overlap_speedup_x"] = overlap["speedup_x"]
+    if lock:
+        snapshot["lockstep_8q_s"] = lock["lockstep_s"]
+        snapshot["lockstep_per_query_8q_s"] = lock["per_query_s"]
+        snapshot["lockstep_speedup_8q_x"] = lock["speedup_x"]
+        snapshot["lockstep_identical"] = lock["identical"]
+        snapshot["lockstep_64q_s"] = lock["recurring_lockstep_s"]
+        snapshot["lockstep_speedup_64q_x"] = lock["recurring_speedup_x"]
+        snapshot["lockstep_waves"] = lock["waves"]
+        snapshot["lockstep_mean_wave"] = lock["mean_wave"]
+        snapshot["lockstep_max_wave"] = lock["max_wave"]
     payload["history"] = history + [snapshot]
     out.write_text(json.dumps(payload, indent=1) + "\n")
-    return rows1 + rows2 + rows3 + rows5 + rows4 + rows6 + rows7
+    return rows1 + rows2 + rows3 + rows5 + rows4 + rows6 + rows7 + rows8
 
 
 def main() -> None:
@@ -791,6 +893,17 @@ def main() -> None:
         if ox < 1.0:
             print(f"NOTE: double-buffered flush speedup {ox:.2f}x "
                   f"({cpus}-core host; overlap needs a spare core)")
+    if "resplan.lockstep.identical" in by_name:
+        assert by_name["resplan.lockstep.identical"] == 1.0, \
+            "lockstep plans diverged from the per-query pipeline"
+        lx = by_name["resplan.lockstep.speedup_x"]
+        if cpus >= 4:
+            assert lx >= 1.5, \
+                f"lockstep must be >= 1.5x the per-query pipeline on a " \
+                f"{cpus}-core host, got {lx:.2f}x"
+        elif lx < 1.5:
+            print(f"NOTE: lockstep speedup {lx:.2f}x ({cpus}-core host; "
+                  "stacked waves need spare cores to win)")
 
 
 if __name__ == "__main__":

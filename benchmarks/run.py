@@ -9,7 +9,10 @@ table.  Prints ``name,us_per_call,derived`` CSV and archives JSON.
 ``artifacts/bench_results.json`` into one trajectory report
 (``artifacts/bench_report.json`` + ``.md``): a flat metric table for the
 current state and, for bench files that append per-run ``history``
-snapshots (resource_planning_bench does), a trend table across runs/PRs.
+snapshots (resource_planning_bench does), a trend table across runs/PRs
+— every numeric snapshot key is trended automatically, so the
+``lockstep_*`` cross-query planning keys ride along with no changes
+here.
 """
 from __future__ import annotations
 

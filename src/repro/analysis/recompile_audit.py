@@ -65,7 +65,8 @@ _BACKEND_SOURCES = (
 )
 
 PROBES = ("scan_params_reuse", "scan_chunk_churn", "scan_many_qpad",
-          "climb_params_reuse", "climb_many_qpad", "grid_rekey")
+          "climb_params_reuse", "climb_many_qpad", "grid_rekey",
+          "lockstep_wave_qpad")
 
 # The per-backend compile-count contract for the probe battery below,
 # at ONE plan-mesh device.  numpy compiles nothing; jax keys chunk
@@ -82,13 +83,16 @@ EXPECTED_COMPILE_COUNTS: Dict[str, Dict[str, int]] = {
     "numpy": {p: 0 for p in PROBES},
     "jax": {"scan_params_reuse": 1, "scan_chunk_churn": 2,
             "scan_many_qpad": 3, "climb_params_reuse": 1,
-            "climb_many_qpad": 2, "grid_rekey": 2},
+            "climb_many_qpad": 2, "grid_rekey": 2,
+            "lockstep_wave_qpad": 3},
     "jax_x64": {"scan_params_reuse": 1, "scan_chunk_churn": 2,
                 "scan_many_qpad": 3, "climb_params_reuse": 1,
-                "climb_many_qpad": 2, "grid_rekey": 2},
+                "climb_many_qpad": 2, "grid_rekey": 2,
+                "lockstep_wave_qpad": 3},
     "pallas": {"scan_params_reuse": 1, "scan_chunk_churn": 1,
                "scan_many_qpad": 3, "climb_params_reuse": 1,
-               "climb_many_qpad": 1, "grid_rekey": 2},
+               "climb_many_qpad": 1, "grid_rekey": 2,
+               "lockstep_wave_qpad": 3},
 }
 
 
@@ -109,6 +113,11 @@ _PROBE_ROWS = 4 * 3                 # _small_cluster grid size
 _CHURN_CHUNKS = (8, 4)              # scan_chunk_churn chunk_size sweep
 _SCAN_MANY_QS = range(1, 6)         # scan_many_qpad Q sweep
 _CLIMB_MANY_QS = range(1, 5)        # climb_many_qpad Q sweep
+# lockstep_wave_qpad: two per-query wave sizes, then the stacked
+# cross-query union wave (2 + 3 queries' requests in ONE program) — the
+# contract that lockstep multi-query stacking introduces no program
+# shapes beyond the existing padded-Q classes
+_LOCKSTEP_QS = (2, 3, 5)
 
 
 def expected_compile_counts(backend_name: str,
@@ -143,6 +152,10 @@ def expected_compile_counts(backend_name: str,
          for q in _SCAN_MANY_QS})
     base["climb_many_qpad"] = len(
         {_pad_multiple(q, max(2, D)) for q in _CLIMB_MANY_QS})
+    base["lockstep_wave_qpad"] = len(
+        {(_pad_even(q), _many_chunk(_PROBE_ROWS, _pad_even(q), D,
+                                    DEFAULT_CHUNK))
+         for q in _LOCKSTEP_QS})
     return base
 
 
@@ -233,6 +246,12 @@ def run_probes(backend) -> Dict[str, int]:
     fn = _make_probe_fn()
     backend.argmin_grid(fn, small, params=np.asarray([1.0, 0.0]))
     backend.argmin_grid(fn, alt, params=np.asarray([1.0, 0.0]))
+
+    label["cur"] = "lockstep_wave_qpad"
+    fn = _make_probe_fn()
+    for q in _LOCKSTEP_QS:                # per-query waves, then union
+        pm = np.stack([[float(i), 0.0] for i in range(1, q + 1)])
+        backend.argmin_grid_many(fn, small, pm)
 
     return counts
 

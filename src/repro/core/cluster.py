@@ -98,6 +98,11 @@ class PlanningStats:
     broker_requests: int = 0          # requests submitted
     broker_dedup_hits: int = 0        # resolved without their own search
     broker_batches: int = 0           # stacked array programs executed
+    # flush-wave geometry (broker-level only: a wave spans requests from
+    # many costings, so per-request stats never see these) — one entry
+    # per non-empty flush, counting the requests that entered the wave
+    broker_waves: int = 0
+    broker_wave_sizes: list = dataclasses.field(default_factory=list)
 
     def merge(self, other: "PlanningStats") -> None:
         self.configs_explored += other.configs_explored
@@ -108,6 +113,8 @@ class PlanningStats:
         self.broker_requests += other.broker_requests
         self.broker_dedup_hits += other.broker_dedup_hits
         self.broker_batches += other.broker_batches
+        self.broker_waves += other.broker_waves
+        self.broker_wave_sizes.extend(other.broker_wave_sizes)
         for key, d in other.cache_detail.items():
             mine = self.cache_detail.setdefault(
                 key, {"hits": 0, "misses": 0, "inserts": 0})

@@ -15,6 +15,7 @@ import dataclasses
 import random
 from typing import List, Optional, Sequence, Tuple
 
+from repro.analysis.registry import hot_path
 from repro.core.plans import (IMPLS, OperatorCosting, PlanNode, has_edge,
                               join_cardinality, leaf)
 from repro.core.schema import Schema
@@ -175,6 +176,108 @@ def mutate(schema: Schema, plan: PlanNode, costing: OperatorCosting,
 
 # ------------------------------ the planner -------------------------------- #
 
+class FastRandomizedSession:
+    """One query's randomized search as a resumable per-round driver.
+
+    ``queue_round()`` draws the whole population's mutations (RNG only)
+    and queues their candidate costings on the broker;
+    ``consume_round()`` applies them.  Each session owns its
+    ``random.Random(seed)``, consumed in the same per-query order as a
+    solo ``fast_randomized_plan`` run — population seeding at
+    construction, then one draw pair per plan per round — so lockstep
+    interleaving across queries (``drive_fast_randomized``) leaves every
+    stream, hence every plan and archive, bit-identical."""
+
+    def __init__(self, schema: Schema, tables: Sequence[str],
+                 costing: OperatorCosting, *,
+                 iterations: int = 10, population: int = 4,
+                 eps: float = 0.05, seed: int = 0,
+                 impls: Sequence[str] = IMPLS):
+        self.schema = schema
+        self.costing = costing
+        self.impls = tuple(impls)
+        costing.begin_query()    # fresh per-query resource-plan memo
+        self.rng = random.Random(seed)
+        self.archive = ParetoArchive(eps=eps)
+        self.pop: List[PlanNode] = []
+        for _ in range(population * 3):
+            p = random_bushy_plan(schema, tables, costing, self.rng, impls)
+            if p is not None:
+                self.pop.append(p)
+                self.archive.offer(p)
+            if len(self.pop) >= population:
+                break
+        self.rounds_left = iterations if self.pop else 0
+        self._chosen: Optional[List] = None
+
+    @property
+    def done(self) -> bool:
+        return self.rounds_left <= 0
+
+    def queue_round(self) -> None:
+        """Draw this round's mutations (the RNG consumption must happen
+        whether or not a broker exists) and queue their costings."""
+        if self.done:
+            return
+        # draw the whole population's mutations first (same RNG stream as
+        # mutating inline: each draw consumes exactly two choices) ...
+        self._chosen = [(p, _choose_mutation(p, self.rng))
+                        for p in self.pop]
+        if self.costing.broker is not None:
+            # ... so every plan's candidate costings can be queued on the
+            # session broker before anything resolves
+            for p, ch in self._chosen:
+                if ch is not None:
+                    _prefetch_mutation(self.schema, ch[0], ch[1],
+                                       self.costing, self.impls)
+
+    def consume_round(self) -> None:
+        if self.done or self._chosen is None:
+            return
+        nxt: List[PlanNode] = []
+        for p, ch in self._chosen:
+            q = None if ch is None else \
+                _apply_mutation(self.schema, p, self.costing, ch[0],
+                                ch[1], self.impls)
+            if q is not None:
+                self.archive.offer(q)
+                # hill-climb move on scalar objective, keep diversity via archive
+                nxt.append(q if q.total_cost < p.total_cost else p)
+            else:
+                nxt.append(p)
+        self.pop = nxt
+        self._chosen = None
+        self.rounds_left -= 1
+
+    def result(self) -> Tuple[Optional[PlanNode], ParetoArchive]:
+        return self.archive.best(0), self.archive
+
+
+@hot_path("advances every concurrent query's mutation round per flush wave",
+          folds=1)
+def drive_fast_randomized(sessions: Sequence[FastRandomizedSession],
+                          broker) -> None:
+    """Advance many randomized-search sessions in lockstep: every live
+    query's round-R mutation prefetches ride ONE shared flush wave
+    (round-interleaved), then each session applies its round.  Sessions
+    with fewer remaining rounds retire early; plans/archives stay
+    bit-identical to solo runs (each session owns its RNG stream)."""
+    live = [s for s in sessions if not s.done]
+    pipelined = broker is not None and hasattr(broker, "flush_async")
+    while live:
+        for s in live:
+            s.queue_round()
+        if pipelined:
+            # dispatch the cross-query wave; programs run on device while
+            # the apply loops below do their tree surgery
+            broker.flush_async()
+        elif broker is not None:
+            broker.flush()
+        for s in live:
+            s.consume_round()
+        live = [s for s in live if not s.done]
+
+
 def fast_randomized_plan(schema: Schema, tables: Sequence[str],
                          costing: OperatorCosting, *,
                          iterations: int = 10, population: int = 4,
@@ -195,44 +298,17 @@ def fast_randomized_plan(schema: Schema, tables: Sequence[str],
                 population=population, eps=eps, seed=seed, impls=impls)
         finally:
             costing.backend = saved
-    costing.begin_query()        # fresh per-query resource-plan memo
-    rng = random.Random(seed)
-    archive = ParetoArchive(eps=eps)
-    pop: List[PlanNode] = []
-    for _ in range(population * 3):
-        p = random_bushy_plan(schema, tables, costing, rng, impls)
-        if p is not None:
-            pop.append(p)
-            archive.offer(p)
-        if len(pop) >= population:
-            break
-    if not pop:
-        return None, archive
-    for _ in range(iterations):
-        # draw the whole population's mutations first (same RNG stream as
-        # mutating inline: each draw consumes exactly two choices) ...
-        chosen = [(p, _choose_mutation(p, rng)) for p in pop]
-        if costing.broker is not None:
-            # ... so every plan's candidate costings can be queued on the
-            # session broker and the first resolve flushes them together
-            for p, ch in chosen:
-                if ch is not None:
-                    _prefetch_mutation(schema, ch[0], ch[1], costing, impls)
-            if hasattr(costing.broker, "flush_async"):
-                # double-buffered broker: dispatch the generation's wave
-                # now, so its programs run on device while the mutation
-                # loop below does its tree surgery; the first result()
-                # commits the wave in submission order
-                costing.broker.flush_async()
-        nxt: List[PlanNode] = []
-        for p, ch in chosen:
-            q = None if ch is None else \
-                _apply_mutation(schema, p, costing, ch[0], ch[1], impls)
-            if q is not None:
-                archive.offer(q)
-                # hill-climb move on scalar objective, keep diversity via archive
-                nxt.append(q if q.total_cost < p.total_cost else p)
-            else:
-                nxt.append(p)
-        pop = nxt
-    return archive.best(0), archive
+    sess = FastRandomizedSession(
+        schema, tables, costing, iterations=iterations,
+        population=population, eps=eps, seed=seed, impls=impls)
+    while not sess.done:
+        sess.queue_round()
+        if costing.broker is not None and \
+                hasattr(costing.broker, "flush_async"):
+            # double-buffered broker: dispatch the generation's wave
+            # now, so its programs run on device while the mutation
+            # loop does its tree surgery; the first result() commits
+            # the wave in submission order
+            costing.broker.flush_async()
+        sess.consume_round()
+    return sess.result()

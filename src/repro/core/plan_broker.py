@@ -56,14 +56,23 @@ therefore planned two-phase: stage 2 still runs their searches stacked
 lookup is re-done per request in submission order during stage 3 — a
 request whose re-lookup hits (possibly against a same-flush insert)
 takes the hit exactly as the sequential loop would, and the speculative
-search result is committed (and inserted) only otherwise.  Plans,
-costs, cache contents, and cache hit/miss counters all match the
-sequential per-operator loop; only ``configs_explored`` may exceed it
-(discarded speculative searches are still counted as work done).  The
-property tests in tests/test_plan_broker.py pin this.  If a leader's
-search comes back infeasible (nothing insertable), its followers are
-re-planned one by one through the sequential semantics, so that corner
-matches the per-operator loop too.
+search result is committed (and inserted) only otherwise.  Cached
+requests sharing a key with an *earlier same-flush* request take the
+same per-request stage-3 replay whatever the cache mode: an exact-mode
+duplicate must count one miss on the leader and one HIT on the
+follower (its sequential lookup would see the leader's fresh insert),
+not two entry-time misses — the lockstep multi-query driver
+(repro.core.raqo ``plan_queries``) routinely puts every query's
+level-L copy of a recurring operator in one wave, and its cache
+counters must still match per-query sequential planning exactly.
+Plans, costs, cache contents, and cache hit/miss counters all match
+the sequential per-operator loop; only ``configs_explored`` may exceed
+it for interpolating caches (discarded speculative searches are still
+counted as work done).  The property tests in
+tests/test_plan_broker.py and tests/test_lockstep.py pin this.  If a
+leader's search comes back infeasible (nothing insertable), its
+followers are re-planned one by one through the sequential semantics,
+so that corner matches the per-operator loop too.
 
 Double-buffered flushes: stage 2 is internally split into *dispatch*
 (group, stack, launch the array programs — backends expose this half as
@@ -223,6 +232,29 @@ class PlanBroker:
     def pending_count(self) -> int:
         return len(self._pending)
 
+    def _record_wave(self, pending) -> None:
+        """Wave accounting: one entry per non-empty flush, sized by the
+        requests that entered it (broker-level only — a wave spans many
+        costings, so per-request stats never see these counters)."""
+        self.stats.broker_waves += 1
+        self.stats.broker_wave_sizes.append(len(pending))
+
+    def counters_snapshot(self) -> dict:
+        """JSON-friendly broker counters including flush-wave geometry —
+        the lockstep multi-query win is wave *shape* (few waves, ΣQ_L
+        requests each), not just wall-clock, so benches trend these next
+        to the timings."""
+        ws = list(self.stats.broker_wave_sizes)
+        return {
+            "requests": self.stats.broker_requests,
+            "dedup_hits": self.stats.broker_dedup_hits,
+            "batches": self.stats.broker_batches,
+            "waves": self.stats.broker_waves,
+            "wave_sizes": ws,
+            "max_wave": max(ws) if ws else 0,
+            "mean_wave": round(sum(ws) / len(ws), 3) if ws else 0.0,
+        }
+
     # ------------------------------------------------------------------ #
     @staticmethod
     def _lookup(req: PlanRequest) -> Optional[Result]:
@@ -250,6 +282,7 @@ class PlanBroker:
         pending, self._pending = self._pending, []
         if not pending:
             return
+        self._record_wave(pending)
         order, execs = self._stage1(pending)
         if not execs:
             return
@@ -271,6 +304,7 @@ class PlanBroker:
         pending, self._pending = self._pending, []
         if not pending:
             return
+        self._record_wave(pending)
         order, execs = self._stage1(pending)
         if not execs:
             return
@@ -314,44 +348,57 @@ class PlanBroker:
         observe same-flush inserts, so their lookups are deferred to
         stage 3 (submission order); their searches still run stacked in
         stage 2, speculatively.  Exact caches cannot hit on anything a
-        same-flush insert adds under a *different* key, so their lookup
-        happens here and same-key requests dedup onto one leader.
-        Returns (stage-3 submission order, leader execs)."""
+        same-flush insert adds under a *different* key, so a first-seen
+        key's lookup happens here — but a request whose key an EARLIER
+        same-flush request already claimed must replay in stage 3: its
+        sequential lookup would have seen that leader's fresh insert
+        (one miss + one hit, not two misses), which is exactly the
+        multi-query lockstep shape where every query's copy of a
+        recurring operator lands in one wave.  Cache-less duplicates
+        stay plain followers (memo semantics are insertion-order
+        identical either way).  Returns (stage-3 submission order,
+        leader execs)."""
         leaders: Dict[Tuple, _Exec] = {}
         order: List[Tuple[str, object]] = []   # stage-3 submission order
         for req, fut in pending:
+            cached = req.cache is not None and req.cache_key is not None
             if req.cache is None:
                 memo = self._memo.get(self._key(req))
                 if memo is not None and memo[0] is req.fn:
                     self._bump(req, "broker_dedup_hits")
                     self._resolve(fut, memo[1])
                     continue
-            deferred = (req.cache is not None and req.cache_key is not None
-                        and getattr(req.cache, "mode", "exact") != "exact")
-            if req.cache is not None and req.cache_key is not None:
-                if not deferred:
-                    got = self._lookup(req)
-                    if got is not None:
-                        self._resolve(fut, got)
-                        continue
+            deferred = cached and \
+                getattr(req.cache, "mode", "exact") != "exact"
+            if cached:
                 dkey = (("cache", id(req.cache)) + req.cache_key +
                         (req.mode, req.n_random, req.seed))
             else:
                 dkey = ("exact",) + self._key(req)
             led = leaders.get(dkey)
-            if led is None:
-                ex = _Exec(req=req, fut=fut)
-                leaders[dkey] = ex
-                order.append(("dleader" if deferred else "leader", ex))
-            else:
-                self._bump(req, "broker_dedup_hits")
-                if deferred:
-                    # same cache key, but the sequential loop would give
-                    # it a fresh interpolating lookup after the leader's
-                    # insert: full per-request replay in stage 3
+            if led is not None:
+                if cached:
+                    # same cache key as an earlier same-flush request:
+                    # the sequential loop would give it a fresh lookup
+                    # AFTER the leader's insert (an exact-mode hit / an
+                    # interpolating re-interpolation) — full per-request
+                    # replay in stage 3, in submission order.  The replay
+                    # lookup counts the cache hit sequential planning
+                    # would count, so no dedup bump: broker counters stay
+                    # sequential-identical under lockstep multi-query
                     order.append(("dfollower", (req, fut)))
                 else:
+                    self._bump(req, "broker_dedup_hits")
                     led.followers.append((req, fut))
+                continue
+            if cached and not deferred:
+                got = self._lookup(req)
+                if got is not None:
+                    self._resolve(fut, got)
+                    continue
+            ex = _Exec(req=req, fut=fut)
+            leaders[dkey] = ex
+            order.append(("dleader" if deferred else "leader", ex))
         return order, list(leaders.values())
 
     def _finish(self, order: List[Tuple[str, object]], execs: List[_Exec],

@@ -320,6 +320,27 @@ class OperatorCosting:
         if self.broker is not None:
             self.plan_resources_async(impl, ss, ls)
 
+    def share_pending(self, impl: str, ss: float, ls: float):
+        """The raw broker future of an in-flight prefetch for this
+        operator, or None.  Lockstep multi-query planning
+        (``RAQO.plan_queries``) hands it to sibling costings via
+        ``adopt_future`` so identical base-table candidates submit to
+        the broker once — "queue once, fan the future out"."""
+        wrapper = self._pending.get((impl, ss, ls, self.objective))
+        return None if wrapper is None else wrapper._fut
+
+    def adopt_future(self, impl: str, ss: float, ls: float, fut) -> None:
+        """Adopt a sibling costing's broker future as this operator's
+        pending prefetch.  The broker resolves one search; each adopter
+        lands the identical (resources, cost) in its own per-query memo
+        — the same number its own submission would have produced, since
+        the cost is a pure function of (impl, ss, ls, objective) under
+        shared models/cluster.  No-op when this costing already memoized
+        or queued the operator itself."""
+        mkey = (impl, ss, ls, self.objective)
+        if mkey not in self._plan_memo and mkey not in self._pending:
+            self._pending[mkey] = _CostingFuture(self, mkey, fut)
+
     def prefetch_join(self, schema: Schema, l: PlanNode, r: PlanNode,
                       impls: Sequence[str] = IMPLS) -> None:
         """Queue the candidate costings of joining l and r (both operator

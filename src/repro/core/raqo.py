@@ -29,13 +29,16 @@ import numpy as np
 from repro.core.cluster import ClusterConditions, PlanningStats, paper_cluster
 from repro.core.cost_model import (RegressionModel, _split_configs,
                                    monetary_cost, paper_models)
-from repro.core.fast_randomized import fast_randomized_plan
+from repro.core.fast_randomized import (FastRandomizedSession,
+                                        drive_fast_randomized,
+                                        fast_randomized_plan)
 from repro.core.plan_broker import PlanBroker
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.planning_backend import PlanBackend, get_backend
 from repro.core.plans import IMPLS, OperatorCosting, PlanNode, has_edge, leaf
 from repro.core.schema import Schema
-from repro.core.selinger import selinger_plan
+from repro.core.selinger import (SelingerSession, drive_lockstep,
+                                 selinger_plan)
 
 
 @dataclasses.dataclass
@@ -145,33 +148,94 @@ class RAQO:
         return self._wrap(plan, t0, costing)
 
     def plan_queries(self, queries: Sequence[Sequence[str]],
-                     objective: str = "time") -> List[JointPlan]:
+                     objective: str = "time", *,
+                     lockstep: bool = True) -> List[JointPlan]:
         """=> [(p, r), ...] for several concurrent (multi-tenant) queries
-        sharing ONE session broker flush.
+        sharing ONE session broker.
 
         Every query gets its own costing/stats (per-query memo isolation
         unchanged), but all of them defer resource planning to one
-        ``PlanBroker``: before any query is optimized, every query's
-        base-table join candidates are queued, so the first resolve
-        flushes the whole batch's level-1 costings as stacked array
-        programs; operators recurring across queries (the paper's §V
-        recurring-job story) dedup through the broker's session memo or
-        the shared resource-plan cache instead of re-searching."""
+        ``PlanBroker``.  With ``lockstep=True`` (default) the queries
+        advance in LOCKSTEP — every in-flight query's DP level L (or
+        FastRandomized mutation round R) is queued before one shared
+        flush, so each wave is a single stacked (ΣQ_L, P) program per
+        (cost-fn, grid) group instead of Q small ones, and identical
+        base-table candidates submit once with the future fanned out
+        across queries.  Operators recurring across queries (the
+        paper's §V recurring-job story) dedup through the broker's
+        session memo or the shared resource-plan cache instead of
+        re-searching; plans, cache contents/counters, and broker
+        traffic are bit-identical to per-query planning (see
+        repro.core.selinger).  ``lockstep=False`` keeps the per-query
+        double-buffered pipeline (each query drives its own waves after
+        an upfront base-candidate prefetch) — the bench baseline."""
         broker = self.broker if self.broker is not None \
             else PlanBroker(backend=self.backend)
         costings = [self._costing(objective, broker=broker)
                     for _ in queries]
+        if not lockstep:
+            for tables, costing in zip(queries, costings):
+                leaves = {t: leaf(self.schema, t) for t in tables}
+                for a, b in itertools.combinations(tables, 2):
+                    if has_edge(self.schema, leaves[a], leaves[b]):
+                        costing.prefetch_join(self.schema, leaves[a],
+                                              leaves[b])
+            out: List[JointPlan] = []
+            for tables, costing in zip(queries, costings):
+                t0 = time.perf_counter()
+                plan = self._plan(tables, costing)
+                out.append(self._wrap(plan, t0, costing))
+            return out
+        t0 = time.perf_counter()
+        if self.planner == "selinger":
+            # sessions FIRST (constructors run begin_query, which clears
+            # costing pendings), THEN the fanned-out base prefetch, so
+            # level 2 consumes the shared futures instead of resubmitting
+            sessions = [SelingerSession(self.schema, tables, costing)
+                        for tables, costing in zip(queries, costings)]
+            self._prefetch_base(queries, costings)
+            drive_lockstep(sessions, broker)
+            plans = [s.result for s in sessions]
+        else:
+            sessions = [FastRandomizedSession(self.schema, tables, costing,
+                                              seed=self.seed)
+                        for tables, costing in zip(queries, costings)]
+            drive_fast_randomized(sessions, broker)
+            plans = [s.result()[0] for s in sessions]
+        return [self._wrap(p, t0, c) for p, c in zip(plans, costings)]
+
+    def _prefetch_base(self, queries: Sequence[Sequence[str]],
+                       costings: Sequence[OperatorCosting]) -> None:
+        """Queue every query's base-table join candidates, submitting
+        each distinct (impl, ss, ls, objective) ONCE and fanning its
+        broker future out to every other costing that needs it ("queue
+        once, fan the future out").  Cache-backed costings skip the
+        fan-out: their sequential runs count a cache hit per duplicate
+        lookup, and adoption would skip exactly that lookup — submitting
+        per query keeps cache counters sequential-identical (the broker
+        replays same-key requests per-request anyway)."""
+        shared: Dict[Tuple, object] = {}
         for tables, costing in zip(queries, costings):
             leaves = {t: leaf(self.schema, t) for t in tables}
             for a, b in itertools.combinations(tables, 2):
-                if has_edge(self.schema, leaves[a], leaves[b]):
-                    costing.prefetch_join(self.schema, leaves[a], leaves[b])
-        out: List[JointPlan] = []
-        for tables, costing in zip(queries, costings):
-            t0 = time.perf_counter()
-            plan = self._plan(tables, costing)
-            out.append(self._wrap(plan, t0, costing))
-        return out
+                la, lb = leaves[a], leaves[b]
+                if not has_edge(self.schema, la, lb):
+                    continue
+                if costing.cache is not None:
+                    costing.prefetch_join(self.schema, la, lb)
+                    continue
+                ss = min(la.size_gb, lb.size_gb)
+                ls = max(la.size_gb, lb.size_gb)
+                for impl in IMPLS:
+                    key = (impl, ss, ls, costing.objective)
+                    fut = shared.get(key)
+                    if fut is None:
+                        costing.prefetch(impl, ss, ls)
+                        got = costing.share_pending(impl, ss, ls)
+                        if got is not None:
+                            shared[key] = got
+                    else:
+                        costing.adopt_future(impl, ss, ls, fut)
 
     def plan_for_resources(self, tables: Sequence[str],
                            resources: Tuple[int, ...]) -> JointPlan:

@@ -14,12 +14,55 @@ split-independent and a static cardinality stand-in enumerated one level
 ahead queues byte-identical requests.  Level existence matches too —
 ``has_edge`` sees only table sets — so the prefetched wave is exactly
 the wave the sequential driver would have flushed, in the same order.
+
+The same argument extends across QUERIES (``drive_lockstep``, used by
+``RAQO.plan_queries``): because every query's level-L requests are pure
+functions of its own table sets, advancing all in-flight queries one DP
+level per shared flush wave queues, query-major, exactly the requests
+each query's solo run would have queued at that level — so each wave is
+one stacked (ΣQ_L, P) program per (cost-fn, grid) group instead of Q
+small ones.  Byte-identity with per-query sequential planning holds
+piecewise:
+
+- *Leader selection.*  Within a wave, requests are deduplicated in
+  submission order, and the lockstep driver queues queries in their
+  ``plan_queries`` order — so the first occurrence of any signature in
+  a wave belongs to the earliest query that would have searched it
+  sequentially, and the search itself (a deterministic function of
+  (cost-fn, params, grid, mode, seed)) is the one sequential planning
+  would have run.
+- *Within-wave cross-query duplicates.*  A later query's same-key
+  request rides the broker's per-request stage-3 replay (cache-backed
+  keys) or leader/follower collapse (cache-less, session-memo
+  semantics); both are defined to equal "search once, then hit" — which
+  is literally what sequential per-query planning does, since query
+  Q's run would find query P's insert (P < Q) already in the shared
+  cache/memo.  Cache contents, hit/miss/insert counters, and broker
+  traffic therefore match the sequential loop exactly.
+- *Cross-level recurrence.*  An operator recurring at different levels
+  (or different queries' levels) hits whatever the earlier wave
+  inserted; lockstep reorders only requests with *different* signatures
+  relative to sequential, and searches are pure, so no reordering can
+  change any value — only which query's stats record a given hit or
+  miss (aggregates are invariant).  The one aliasing corner: two
+  requests sharing a cache key ``(impl, objective:ls-bucket,
+  round(ss, 6))`` with *different* exact params would make "who
+  searches first" observable through the shared cache.  The bucketed
+  key makes this measure-zero (params equal to 6 decimals within a
+  bucket), and it affects lockstep exactly as it affects any warm-cache
+  reuse in the sequential loop.
+
+Queries retire ragged: a k-way join leaves the lockstep at level k,
+single-table and empty queries short-circuit at construction, and a
+disconnected query's cross-join fallback runs inside its final consume
+(synchronously — one lost overlap step, same submission order).
 """
 from __future__ import annotations
 
 import itertools
 from typing import Dict, FrozenSet, Optional, Sequence
 
+from repro.analysis.registry import hot_path
 from repro.core.plans import (IMPLS, OperatorCosting, PlanNode, has_edge,
                               join_cardinality, leaf)
 from repro.core.schema import Schema
@@ -50,6 +93,113 @@ def _queue_level(schema: Schema, tables: Sequence[str],
     standin.update(new)
 
 
+class SelingerSession:
+    """One query's Selinger DP as a resumable per-level driver.
+
+    ``queue_level(L)`` enqueues level L's candidate costings on the
+    costing's broker (stand-in cardinalities, so it can run before
+    level L-1 resolves); ``consume_level(L)`` resolves level L's best
+    sub-plans.  ``selinger_plan`` drives one session to completion;
+    ``drive_lockstep`` advances many sessions level-by-level against a
+    shared broker so each flush wave stacks every query's level.
+
+    ``done``/``result`` expose completion: trivial queries (zero or one
+    table) finish at construction; a k-way join finishes inside
+    ``consume_level(k)`` (including the one-cross-join fallback for
+    disconnected queries).
+    """
+
+    def __init__(self, schema: Schema, tables: Sequence[str],
+                 costing: OperatorCosting,
+                 impls: Sequence[str] = IMPLS):
+        self.schema = schema
+        self.tables = tuple(tables)
+        self.costing = costing
+        self.impls = tuple(impls)
+        costing.begin_query()    # fresh per-query resource-plan memo
+        self.n = len(self.tables)
+        self.best: Dict[FrozenSet[str], PlanNode] = {
+            frozenset({t}): leaf(schema, t) for t in self.tables}
+        self.done = False
+        self.result: Optional[PlanNode] = None
+        if self.n <= 1:
+            if self.n == 1:
+                self.result = self.best[frozenset(self.tables)]
+            self.done = True
+            return
+        self.standin: Dict[FrozenSet[str], PlanNode] = dict(self.best)
+
+    def queue_level(self, size: int) -> None:
+        """Enqueue level ``size``'s candidate costings (stand-in
+        cardinalities; safe one level ahead of ``consume_level``).
+        No-op once done or outside [2, n] — ragged lockstep callers
+        need not special-case retiring queries."""
+        if self.done or size < 2 or size > self.n:
+            return
+        _queue_level(self.schema, self.tables, self.costing, self.impls,
+                     self.standin, size)
+
+    def prefetch_level_resolved(self, size: int) -> None:
+        """Legacy (non-double-buffered broker) prefetch: enumerate level
+        ``size`` from the RESOLVED ``best`` table (level size-1 already
+        consumed) and queue its costings, so one flush still covers the
+        whole level."""
+        if self.done or size < 2 or size > self.n:
+            return
+        for combo in itertools.combinations(self.tables, size):
+            s = frozenset(combo)
+            for t in combo:
+                sub = self.best.get(s - {t})
+                if sub is None:
+                    continue
+                tleaf = self.best[frozenset({t})]
+                if has_edge(self.schema, sub, tleaf):
+                    self.costing.prefetch_join(self.schema, sub, tleaf,
+                                               self.impls)
+
+    def consume_level(self, size: int) -> None:
+        """Resolve level ``size``: pick each subset's best (plan, split)
+        from the already-planned costings.  At the final level, finish
+        the session (cross-join fallback included)."""
+        if self.done or size < 2 or size > self.n:
+            return
+        for combo in itertools.combinations(self.tables, size):
+            s = frozenset(combo)
+            cand: Optional[PlanNode] = None
+            for t in combo:
+                sub = self.best.get(s - {t})
+                if sub is None:
+                    continue
+                tleaf = self.best[frozenset({t})]
+                if not has_edge(self.schema, sub, tleaf):
+                    continue                      # avoid cross joins
+                plan = self.costing.best_join(self.schema, sub, tleaf,
+                                              self.impls)
+                if cand is None or plan.total_cost < cand.total_cost:
+                    cand = plan
+            if cand is not None:
+                self.best[s] = cand
+        if size == self.n:
+            self._finish()
+
+    def _finish(self) -> None:
+        full = frozenset(self.tables)
+        if full in self.best:
+            self.result = self.best[full]
+        else:
+            # fall back: allow one cross join level for disconnected
+            # queries (synchronous costing — the request misses every
+            # prefetch, so its future resolves through a full flush)
+            for t in self.tables:
+                rest = full - {t}
+                if rest in self.best:
+                    self.result = self.costing.best_join(
+                        self.schema, self.best[rest],
+                        self.best[frozenset({t})], self.impls)
+                    break
+        self.done = True
+
+
 def selinger_plan(schema: Schema, tables: Sequence[str],
                   costing: OperatorCosting,
                   impls: Sequence[str] = IMPLS,
@@ -67,76 +217,71 @@ def selinger_plan(schema: Schema, tables: Sequence[str],
             return selinger_plan(schema, tables, costing, impls)
         finally:
             costing.backend = saved
-    costing.begin_query()        # fresh per-query resource-plan memo
-    tables = tuple(tables)
-    n = len(tables)
-    best: Dict[FrozenSet[str], PlanNode] = {}
-    for t in tables:
-        best[frozenset({t})] = leaf(schema, t)
-    if n == 1:
-        return best[frozenset(tables)]
+    sess = SelingerSession(schema, tables, costing, impls)
+    if sess.done:
+        return sess.result
 
     # double-buffered pipeline: with flush_async, level N's programs run
     # on device while level N+1 enumerates (cardinality stand-ins make
     # the one-level lookahead exact — module docstring); otherwise keep
     # the historical queue-then-flush-per-level behavior
-    pipelined = costing.broker is not None \
-        and hasattr(costing.broker, "flush_async")
+    broker = costing.broker
+    pipelined = broker is not None and hasattr(broker, "flush_async")
     if pipelined:
-        standin = {frozenset({t}): best[frozenset({t})] for t in tables}
-        _queue_level(schema, tables, costing, impls, standin, 2)
-        costing.broker.flush_async()        # dispatch level 2
-    for size in range(2, n + 1):
-        combos = list(itertools.combinations(tables, size))
+        sess.queue_level(2)
+        broker.flush_async()                # dispatch level 2
+    for size in range(2, sess.n + 1):
         if pipelined:
-            if size < n:                    # enumerate the NEXT level
-                _queue_level(schema, tables, costing, impls, standin,
-                             size + 1)
+            sess.queue_level(size + 1)      # enumerate the NEXT level
             # commit level ``size`` (in flight until now), dispatch the
-            # next one; the consume loop below then reads resolved futures
-            costing.broker.flush_async()
-        elif costing.broker is not None:
+            # next one; consume_level then reads resolved futures
+            broker.flush_async()
+        elif broker is not None:
             # batch the whole enumeration level: queue every candidate
             # join's costings (both operator implementations) on the
             # session broker, so the first resolve below flushes the
             # entire level as stacked array programs instead of planning
             # one operator per program call (paper §VI-B at §VII-C scale)
-            for combo in combos:
-                s = frozenset(combo)
-                for t in combo:
-                    sub = best.get(s - {t})
-                    if sub is None:
-                        continue
-                    tleaf = best[frozenset({t})]
-                    if has_edge(schema, sub, tleaf):
-                        costing.prefetch_join(schema, sub, tleaf, impls)
-        for combo in combos:
-            s = frozenset(combo)
-            cand: Optional[PlanNode] = None
-            for t in combo:
-                rest = s - {t}
-                sub = best.get(rest)
-                if sub is None:
-                    continue
-                tleaf = best[frozenset({t})]
-                if not has_edge(schema, sub, tleaf):
-                    continue                      # avoid cross joins
-                plan = costing.best_join(schema, sub, tleaf, impls)
-                if cand is None or plan.total_cost < cand.total_cost:
-                    cand = plan
-            if cand is not None:
-                best[s] = cand
+            sess.prefetch_level_resolved(size)
+        sess.consume_level(size)
+    return sess.result
 
-    full = frozenset(tables)
-    if full in best:
-        return best[full]
-    # fall back: allow one cross join level for disconnected queries
-    for t in tables:
-        rest = full - {t}
-        if rest in best:
-            return costing.best_join(schema, best[rest],
-                                     best[frozenset({t})], impls)
-    return None
+
+@hot_path("advances every concurrent query's DP one level per flush wave",
+          folds=1)
+def drive_lockstep(sessions: Sequence[SelingerSession],
+                   broker) -> None:
+    """Advance many Selinger sessions in lockstep against one shared
+    broker: for each DP level L, every live query's level-L candidates
+    are queued (query-major, in ``sessions`` order) before ONE shared
+    flush, so each wave is a single stacked (ΣQ_L, P) program per
+    (cost-fn, grid) group instead of Q small ones.  Ragged by design:
+    a session past its last level no-ops its queue/consume calls and
+    drops out of ``live``.  Plans, cache contents/counters, and broker
+    traffic are bit-identical to driving each session alone (module
+    docstring)."""
+    live = [s for s in sessions if not s.done]
+    if not live:
+        return
+    pipelined = broker is not None and hasattr(broker, "flush_async")
+    if pipelined:
+        for s in live:
+            s.queue_level(2)
+        broker.flush_async()                # dispatch every query's level 2
+    size = 2
+    while live:
+        if pipelined:
+            for s in live:
+                s.queue_level(size + 1)
+            broker.flush_async()            # commit L, dispatch L+1
+        elif broker is not None:
+            for s in live:
+                s.prefetch_level_resolved(size)
+            broker.flush()                  # one wave for the whole level
+        for s in live:
+            s.consume_level(size)
+        live = [s for s in live if not s.done]
+        size += 1
 
 
 def exhaustive_left_deep(schema: Schema, tables: Sequence[str],
