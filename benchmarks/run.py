@@ -3,16 +3,25 @@ table.  Prints ``name,us_per_call,derived`` CSV and archives JSON.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig13      # substring filter
+    PYTHONPATH=src python -m benchmarks.run --trace    # traced lockstep
     PYTHONPATH=src python -m benchmarks.run --report   # trend report
+
+``--trace`` runs the observability bench (benchmarks/telemetry_bench):
+one traced lockstep batch, exporting the Perfetto trace + attribution
+table + telemetry summary under ``artifacts/`` (``--quick`` shrinks the
+workload and skips the tracked-history append, same contract as the
+other benches).
 
 ``--report`` merges every ``BENCH_*.json`` at the repo root plus
 ``artifacts/bench_results.json`` into one trajectory report
 (``artifacts/bench_report.json`` + ``.md``): a flat metric table for the
 current state and, for bench files that append per-run ``history``
-snapshots (resource_planning_bench does), a trend table across runs/PRs
-— every numeric snapshot key is trended automatically, so the
-``lockstep_*`` cross-query planning keys ride along with no changes
-here.
+snapshots (resource_planning_bench and telemetry_bench do), a trend
+table across runs/PRs — every numeric snapshot key is trended
+automatically, so the ``lockstep_*`` cross-query planning keys ride
+along with no changes here.  A "## telemetry" section summarizes the
+latest traced run (request p50/p99 and the wave
+assembly/execute/commit split).
 """
 from __future__ import annotations
 
@@ -72,6 +81,51 @@ def _lint_summary(sources: list) -> dict:
     return {}
 
 
+def _telemetry_summary(sources: list) -> dict:
+    """Latest traced-run digest for the report: wave p50/p99 and the
+    per-stage split.  Prefers the fresh artifact
+    (artifacts/telemetry_summary.json, written by ``--trace``); falls
+    back to the last snapshot in the tracked BENCH_telemetry.json
+    history (same pattern as ``_lint_summary``)."""
+    artifact = ROOT / "artifacts" / "telemetry_summary.json"
+    if artifact.exists():
+        try:
+            data = json.loads(artifact.read_text())
+            sources.append("artifacts/telemetry_summary.json")
+            req = data.get("request", {})
+            return {"source": "artifacts/telemetry_summary.json",
+                    "requests": req.get("count", 0),
+                    "request_p50_s": req.get("p50_s"),
+                    "request_p99_s": req.get("p99_s"),
+                    "wave_assembly_mean_s":
+                        data.get("wave_assembly", {}).get("mean_s"),
+                    "wave_execute_mean_s":
+                        data.get("wave_execute", {}).get("mean_s"),
+                    "wave_commit_mean_s":
+                        data.get("wave_commit", {}).get("mean_s"),
+                    "waves": data.get("waves"),
+                    "max_wave": data.get("max_wave"),
+                    "programs_built": data.get("programs_built"),
+                    "programs_reused": data.get("programs_reused")}
+        except (json.JSONDecodeError, TypeError):
+            pass
+    tracked = ROOT / "BENCH_telemetry.json"
+    if tracked.exists():
+        try:
+            data = json.loads(tracked.read_text())
+            snap = (data.get("history") or [{}])[-1]
+            keep = ("requests", "request_p50_s", "request_p99_s",
+                    "wave_assembly_mean_s", "wave_execute_mean_s",
+                    "wave_commit_mean_s", "waves", "max_wave",
+                    "programs_built", "programs_reused")
+            out = {k: snap.get(k) for k in keep}
+            out["source"] = "BENCH_telemetry.json (last snapshot)"
+            return out
+        except (json.JSONDecodeError, TypeError, IndexError):
+            pass
+    return {}
+
+
 def report() -> None:
     """Merge BENCH_*.json + artifacts/bench_results.json into one
     markdown/JSON trend table (the cross-PR perf trajectory)."""
@@ -113,12 +167,14 @@ def report() -> None:
             pass
 
     lint = _lint_summary(sources)
+    telemetry = _telemetry_summary(sources)
 
     payload = {"generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
                "sources": sources,
                "metrics": [{"name": n, "value": v} for n, v in metrics],
                "trends": trends,
-               "plan_lint": lint}
+               "plan_lint": lint,
+               "telemetry": telemetry}
     out_dir = ROOT / "artifacts"
     out_dir.mkdir(exist_ok=True)
     (out_dir / "bench_report.json").write_text(
@@ -146,6 +202,12 @@ def report() -> None:
                for k, v in sorted(lint["by_severity"].items())]
         md += [f"| {k} | {v:g} |" for k, v in sorted(lint["by_rule"].items())]
         md += [f"| allowed (pragma) | {lint['allowed']:g} |"]
+    if telemetry:
+        md += ["", "## telemetry", "",
+               f"Source: {telemetry.pop('source', 'n/a')}", "",
+               "| metric | value |", "|---|---|"]
+        md += [f"| {k} | {'' if v is None else format(v, '.6g')} |"
+               for k, v in telemetry.items()]
     (out_dir / "bench_report.md").write_text("\n".join(md) + "\n")
     print(f"wrote {out_dir / 'bench_report.json'} and .md "
           f"({len(metrics)} metrics, {len(trends)} trend series)")
@@ -155,6 +217,13 @@ def main() -> None:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
     if "--report" in sys.argv[1:]:
         report()
+        return
+    if "--trace" in sys.argv[1:]:
+        from benchmarks import telemetry_bench
+        print("name,value,derived")
+        for name, value, derived in \
+                telemetry_bench.run("--quick" in sys.argv[1:]):
+            print(f"{name},{value:.6g},{derived}")
         return
     from benchmarks import (paper_figs, resource_planning_bench,
                             roofline_table, tpu_planner)

@@ -34,6 +34,16 @@ rule ``sync-budget``
     (well, declared) synchronization point, and new un-budgeted syncs
     are exactly how overlap regressions sneak in.
 
+**Obs calls are sync-free.**  The tracing/metrics layer (``repro.obs``)
+records monotonic clocks only — it never reads a device value — so span
+and metric calls rooted at the conventional singleton bindings
+(``_obs`` / ``_metrics`` / ``get_tracer()`` / ``get_metrics()``, plus
+``with _obs.span(...) as sp`` aliases) are skipped entirely, arguments
+included: ``_obs.instant("tick", cost=float(c))`` in a hot loop is
+attribution payload on a host value, not a device sync, and needs no
+``allow(host-sync)`` pragma.  Instrumented hot paths therefore lint
+clean by construction (golden fixture in tests/fixtures_plan_lint.py).
+
 Suppressions use the inline pragma — ``# plan-lint:`` then
 ``allow(host-sync): reason`` — on the offending line or the line above;
 a pragma without a reason is a ``pragma-no-reason`` warning (report.py).
@@ -48,6 +58,18 @@ from repro.analysis.report import (Finding, apply_pragmas, pragma_findings)
 
 SYNC_ATTRS = {"item", "block_until_ready", "device_get"}
 NP_MODULE_NAMES = {"np", "numpy"}
+
+# obs (repro.obs) span/metric calls are sync-free by contract: the
+# tracer reads monotonic clocks only and never touches device values, so
+# anything inside an obs call's argument list is attribution payload on
+# already-host values, not a device sync.  Roots are deliberately the
+# UNAMBIGUOUS conventional bindings only (`_obs = get_tracer()` /
+# `_metrics = get_metrics()`) and the accessors themselves — a stray
+# variable merely named `metrics` never earns the exemption; `with ...
+# as sp:` / `sp = _obs.span(...)` aliases are tracked per function like
+# host names
+OBS_ROOT_NAMES = {"_obs", "_tracer", "_metrics",
+                  "get_tracer", "get_metrics"}
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 DEFAULT_TREE = _REPO_ROOT / "src" / "repro"
@@ -98,6 +120,26 @@ def _root_name(node: ast.AST) -> Optional[str]:
     return node.id if isinstance(node, ast.Name) else None
 
 
+def _call_chain(node: ast.Call) -> List[str]:
+    """Dotted/called segments of a call's func, outermost attr first:
+    ``self._obs.span(...)`` -> ["span", "_obs", "self"];
+    ``get_metrics().histogram("h").observe(x)`` -> ["observe",
+    "histogram", "get_metrics"]."""
+    parts: List[str] = []
+    fn = node.func
+    while True:
+        if isinstance(fn, ast.Attribute):
+            parts.append(fn.attr)
+            fn = fn.value
+        elif isinstance(fn, ast.Call):
+            fn = fn.func
+        else:
+            break
+    if isinstance(fn, ast.Name):
+        parts.append(fn.id)
+    return parts
+
+
 class _HotFnVisitor(ast.NodeVisitor):
     """Walk one hot function (nested defs included), tracking loop depth
     and which names hold already-synced host (numpy) values."""
@@ -108,7 +150,15 @@ class _HotFnVisitor(ast.NodeVisitor):
         self.reason = reason
         self.loop_depth = 0
         self.host_names: Set[str] = set()
+        self.obs_names: Set[str] = set(OBS_ROOT_NAMES)
         self.findings: List[Finding] = []
+
+    def _is_obs_call(self, node: ast.Call) -> bool:
+        """A span/metric call on an obs root (or a tracked span alias):
+        sync-free by contract, arguments included."""
+        parts = _call_chain(node)
+        return len(parts) >= 2 and \
+            any(p in self.obs_names for p in parts[1:])
 
     def _loop(self, node):
         self.loop_depth += 1
@@ -131,9 +181,29 @@ class _HotFnVisitor(ast.NodeVisitor):
                 elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
                 self.host_names.update(
                     e.id for e in elts if isinstance(e, ast.Name))
+        if isinstance(node.value, ast.Call) \
+                and self._is_obs_call(node.value):
+            # `sp = _obs.span(...)`: alias the span handle
+            self.obs_names.update(
+                t.id for t in node.targets if isinstance(t, ast.Name))
         self.generic_visit(node)
 
+    def visit_With(self, node):
+        # `with _obs.span(...) as sp:` — sp.set(...) payload is obs too
+        for item in node.items:
+            if isinstance(item.context_expr, ast.Call) \
+                    and self._is_obs_call(item.context_expr) \
+                    and isinstance(item.optional_vars, ast.Name):
+                self.obs_names.add(item.optional_vars.id)
+        self.generic_visit(node)
+
+    visit_AsyncWith = visit_With
+
     def visit_Call(self, node: ast.Call):
+        if self._is_obs_call(node):
+            # do not recurse: host conversions in the argument list are
+            # attribution payload, not device syncs (module docstring)
+            return
         desc = _sync_call(node)
         if desc:
             # float()/.item() on a tracked host name is not a device

@@ -19,6 +19,9 @@ from repro.analysis.registry import hot_path
 from repro.core.plans import (IMPLS, OperatorCosting, PlanNode, has_edge,
                               join_cardinality, leaf)
 from repro.core.schema import Schema
+from repro.obs import get_tracer
+
+_obs = get_tracer()
 
 CostVec = Tuple[float, float]     # (time s, money $)
 
@@ -264,9 +267,14 @@ def drive_fast_randomized(sessions: Sequence[FastRandomizedSession],
     bit-identical to solo runs (each session owns its RNG stream)."""
     live = [s for s in sessions if not s.done]
     pipelined = broker is not None and hasattr(broker, "flush_async")
+    rnd = 0
     while live:
-        for s in live:
-            s.queue_round()
+        with _obs.span("randomized.queue", cat="driver") as sp:
+            for s in live:
+                s.queue_round()
+            if sp:
+                sp.set(round=rnd, queries=len(live))
+        rnd += 1
         if pipelined:
             # dispatch the cross-query wave; programs run on device while
             # the apply loops below do their tree surgery

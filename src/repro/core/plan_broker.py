@@ -98,6 +98,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -107,8 +108,72 @@ from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.plan_cache import ResourcePlanCache
 from repro.core.planning_backend import (BatchCostFn, PlanBackend, Result,
                                          get_backend)
+from repro.obs import get_metrics, get_tracer
 
 ScalarCostFn = Callable[[Tuple[int, ...]], float]
+
+# bound once at import; enable/disable flips the singletons in place.
+# Disabled-tracer cost on the flush hot loop: one attribute load + branch
+# per instrumentation point (no kwargs dicts, no clock reads — pinned
+# allocation-free by tests/test_obs.py)
+_obs = get_tracer()
+_metrics = get_metrics()
+
+
+def _request_done(fut: "PlanFuture") -> None:
+    """Tracing-enabled path: stamp resolution and feed the per-request
+    latency histogram (submit -> resolve, the broker's tail metric)."""
+    now = time.perf_counter_ns()
+    fut.obs["resolve"] = now
+    _metrics.histogram("broker.request_s").observe(
+        (now - fut.obs["submit"]) / 1e9)
+
+
+def _wave_assembled(t0_ns: int, wave_no: int, size: int, leaders: int,
+                    order, pipelined: bool, dispatched: bool) -> None:
+    """Tracing-enabled path: close the wave-assembly span (stage 1 dedup
+    + stage 2 dispatch), stamp every future the wave carries, and open
+    the wave's async interval (closed at commit, so double-buffered
+    waves render as overlapping tracks in Perfetto)."""
+    _obs.complete("broker.wave", t0_ns, cat="broker", wave=wave_no,
+                  size=size, leaders=leaders, pipelined=pipelined)
+    now = time.perf_counter_ns()
+    _metrics.histogram("broker.wave_assembly_s").observe(
+        (now - t0_ns) / 1e9)
+    for role, entry in order:
+        futs = [entry[1]] if role == "dfollower" else \
+            [entry.fut] + [f for _, f in entry.followers]
+        for f in futs:
+            if f.obs is not None:
+                f.obs["wave"] = wave_no
+                f.obs["dispatch"] = now
+    if dispatched:
+        _obs.async_begin("wave", wave_no, size=size, pipelined=pipelined)
+
+
+def _wave_executed(t0_ns: int, wave_no: int, order) -> None:
+    """Tracing-enabled path: record the finalize (host-sync) duration and
+    stamp per-request execute completion."""
+    now = time.perf_counter_ns()
+    _obs.complete("broker.wave.execute", t0_ns, cat="broker", wave=wave_no)
+    _metrics.histogram("broker.wave_execute_s").observe(
+        (now - t0_ns) / 1e9)
+    for role, entry in order:
+        futs = [entry[1]] if role == "dfollower" else \
+            [entry.fut] + [f for _, f in entry.followers]
+        for f in futs:
+            if f.obs is not None:
+                f.obs["execute_done"] = now
+
+
+def _wave_committed(t0_ns: int, wave_no: int, n: int) -> None:
+    """Tracing-enabled path: record the stage-3 commit duration and close
+    the wave's async interval."""
+    _obs.complete("broker.wave.commit", t0_ns, cat="broker",
+                  wave=wave_no, entries=n)
+    _metrics.histogram("broker.wave_commit_s").observe(
+        (time.perf_counter_ns() - t0_ns) / 1e9)
+    _obs.async_end("wave", wave_no)
 
 
 @dataclasses.dataclass
@@ -142,14 +207,20 @@ class PlanRequest:
 
 class PlanFuture:
     """Handle to a deferred plan; ``result()`` flushes the broker if the
-    request is still pending and returns ``(resources, cost)``."""
+    request is still pending and returns ``(resources, cost)``.
 
-    __slots__ = ("_broker", "done", "value")
+    When tracing is enabled at submit time, ``obs`` holds the request's
+    lifecycle stamps (``perf_counter_ns``) and ``critical_path()``
+    reports the latency breakdown; with tracing off, ``obs`` stays None
+    and the future costs exactly what it did pre-instrumentation."""
+
+    __slots__ = ("_broker", "done", "value", "obs")
 
     def __init__(self, broker: "PlanBroker"):
         self._broker = broker
         self.done = False
         self.value: Result = (None, math.inf)
+        self.obs: Optional[dict] = None
 
     def result(self) -> Result:
         if not self.done:
@@ -157,6 +228,31 @@ class PlanFuture:
         if not self.done:
             raise RuntimeError("broker flush did not resolve this request")
         return self.value
+
+    def critical_path(self) -> Optional[dict]:
+        """Latency breakdown of this request (None when tracing was off
+        at submit): ``verdict`` (memo / cache-hit / leader / follower /
+        replay / dleader), ``wave`` number, and the seconds split —
+        ``queue_s`` (submit -> wave dispatch), ``execute_s`` (dispatch ->
+        wave sync), ``commit_s`` (sync -> resolve), ``total_s``.  Memo /
+        cache hits resolve before any wave, so they only carry
+        ``total_s``."""
+        o = self.obs
+        if o is None:
+            return None
+        out: dict = {"verdict": o.get("verdict", "pending"),
+                     "wave": o.get("wave")}
+        sub, res = o.get("submit"), o.get("resolve")
+        disp, xd = o.get("dispatch"), o.get("execute_done")
+        if sub is not None and res is not None:
+            out["total_s"] = (res - sub) / 1e9
+        if sub is not None and disp is not None:
+            out["queue_s"] = (disp - sub) / 1e9
+        if disp is not None and xd is not None:
+            out["execute_s"] = (xd - disp) / 1e9
+        if xd is not None and res is not None:
+            out["commit_s"] = (res - xd) / 1e9
+        return out
 
 
 @dataclasses.dataclass
@@ -181,6 +277,7 @@ class _Wave:
     execs: List[_Exec]
     finalize: Callable[[], None]
     futs: frozenset
+    wave_no: int = 0
 
 
 class PlanBroker:
@@ -219,12 +316,18 @@ class PlanBroker:
         """Queue a request; returns a future resolved at the next flush
         (or immediately, on a session-memo hit)."""
         fut = PlanFuture(self)
+        if _obs.enabled:
+            fut.obs = {"submit": time.perf_counter_ns(),
+                       "verdict": "pending"}
         self._bump(req, "broker_requests")
         if req.cache is None:
             hit = self._memo.get(self._key(req))
             if hit is not None and hit[0] is req.fn:
                 self._bump(req, "broker_dedup_hits")
                 fut.value, fut.done = hit[1], True
+                if fut.obs is not None:
+                    fut.obs["verdict"] = "memo"
+                    _request_done(fut)
                 return fut
         self._pending.append((req, fut))
         return fut
@@ -283,10 +386,16 @@ class PlanBroker:
         if not pending:
             return
         self._record_wave(pending)
+        wave_no = self.stats.broker_waves
+        t0 = time.perf_counter_ns() if _obs.enabled else 0
         order, execs = self._stage1(pending)
-        if not execs:
+        fin = self._dispatch(execs) if execs else None
+        if _obs.enabled:
+            _wave_assembled(t0, wave_no, len(pending), len(execs), order,
+                            False, fin is not None)
+        if fin is None:
             return
-        self._finish(order, execs, self._dispatch(execs))
+        self._finish(order, execs, fin, wave_no)
 
     def flush_async(self) -> None:
         """Double-buffered flush: commit the previous in-flight wave
@@ -305,8 +414,13 @@ class PlanBroker:
         if not pending:
             return
         self._record_wave(pending)
+        wave_no = self.stats.broker_waves
+        t0 = time.perf_counter_ns() if _obs.enabled else 0
         order, execs = self._stage1(pending)
         if not execs:
+            if _obs.enabled:
+                _wave_assembled(t0, wave_no, len(pending), 0, order,
+                                True, False)
             return
         futs = set()
         for role, entry in order:
@@ -315,9 +429,12 @@ class PlanBroker:
             else:
                 futs.add(id(entry.fut))
                 futs.update(id(ffut) for _, ffut in entry.followers)
-        self._inflight = _Wave(order=order, execs=execs,
-                               finalize=self._dispatch(execs),
-                               futs=frozenset(futs))
+        fin = self._dispatch(execs)
+        if _obs.enabled:
+            _wave_assembled(t0, wave_no, len(pending), len(execs), order,
+                            True, True)
+        self._inflight = _Wave(order=order, execs=execs, finalize=fin,
+                               futs=frozenset(futs), wave_no=wave_no)
 
     def inflight_count(self) -> int:
         """Futures the in-flight wave will resolve (0 when none)."""
@@ -327,7 +444,8 @@ class PlanBroker:
         """Finalize + commit the in-flight wave, if any."""
         wave, self._inflight = self._inflight, None
         if wave is not None:
-            self._finish(wave.order, wave.execs, wave.finalize)
+            self._finish(wave.order, wave.execs, wave.finalize,
+                         wave.wave_no)
 
     def _ensure(self, fut: PlanFuture) -> None:
         """Resolve ``fut``: a member of the in-flight wave commits just
@@ -366,6 +484,8 @@ class PlanBroker:
                 memo = self._memo.get(self._key(req))
                 if memo is not None and memo[0] is req.fn:
                     self._bump(req, "broker_dedup_hits")
+                    if fut.obs is not None:
+                        fut.obs["verdict"] = "memo"
                     self._resolve(fut, memo[1])
                     continue
             deferred = cached and \
@@ -377,6 +497,8 @@ class PlanBroker:
                 dkey = ("exact",) + self._key(req)
             led = leaders.get(dkey)
             if led is not None:
+                if fut.obs is not None:
+                    fut.obs["verdict"] = "replay" if cached else "follower"
                 if cached:
                     # same cache key as an earlier same-flush request:
                     # the sequential loop would give it a fresh lookup
@@ -394,18 +516,25 @@ class PlanBroker:
             if cached and not deferred:
                 got = self._lookup(req)
                 if got is not None:
+                    if fut.obs is not None:
+                        fut.obs["verdict"] = "cache-hit"
                     self._resolve(fut, got)
                     continue
             ex = _Exec(req=req, fut=fut)
             leaders[dkey] = ex
+            if fut.obs is not None:
+                fut.obs["verdict"] = "dleader" if deferred else "leader"
             order.append(("dleader" if deferred else "leader", ex))
         return order, list(leaders.values())
 
     def _finish(self, order: List[Tuple[str, object]], execs: List[_Exec],
-                finalize: Callable[[], None]) -> None:
+                finalize: Callable[[], None], wave_no: int = 0) -> None:
         """Finalize a dispatched wave (the single host sync), then run
         stage 3: float64 commit + fan-out, in submission order."""
+        t0 = time.perf_counter_ns() if _obs.enabled else 0
         finalize()
+        if _obs.enabled:
+            _wave_executed(t0, wave_no, order)
         retry = [ex for ex in execs
                  if ex.req.scan_fallback and ex.req.mode == "ensemble"
                  and not math.isfinite(ex.cost)]
@@ -414,6 +543,7 @@ class PlanBroker:
             # scan, still stacked per (fn, grid) group
             self._run(retry, force_mode="grid")
 
+        tc = time.perf_counter_ns() if _obs.enabled else 0
         for role, entry in order:
             if role == "dfollower":
                 # sequential per-request replay: its lookup sees every
@@ -456,6 +586,8 @@ class PlanBroker:
                 # as it goes.  Rare corner: replay it sequentially.
                 for freq, ffut in ex.followers:
                     self._resolve(ffut, self._solve_one(freq))
+        if _obs.enabled:
+            _wave_committed(tc, wave_no, len(order))
 
     # ------------------------------------------------------------------ #
     @hot_path("dispatches one stacked search program per (fn, grid) group")
@@ -482,24 +614,28 @@ class PlanBroker:
             mode = force_mode or req0.mode
             pm = np.stack([ex.req.params for ex in entries])
             gstats = PlanningStats()
-            if mode == "grid":
-                if hasattr(be, "argmin_grid_many_async"):
-                    fin = be.argmin_grid_many_async(
-                        req0.fn, req0.cluster, pm, stats=gstats)
-                else:               # backend without the async split
-                    results = be.argmin_grid_many(
-                        req0.fn, req0.cluster, pm, stats=gstats)
-                    fin = (lambda r=results: r)
-            else:
-                if hasattr(be, "hill_climb_ensemble_many_async"):
-                    fin = be.hill_climb_ensemble_many_async(
-                        req0.fn, req0.cluster, pm, stats=gstats,
-                        n_random=req0.n_random, seed=req0.seed)
+            with _obs.span("broker.dispatch.group", cat="broker") as sp:
+                if mode == "grid":
+                    if hasattr(be, "argmin_grid_many_async"):
+                        fin = be.argmin_grid_many_async(
+                            req0.fn, req0.cluster, pm, stats=gstats)
+                    else:           # backend without the async split
+                        results = be.argmin_grid_many(
+                            req0.fn, req0.cluster, pm, stats=gstats)
+                        fin = (lambda r=results: r)
                 else:
-                    results = be.hill_climb_ensemble_many(
-                        req0.fn, req0.cluster, pm, stats=gstats,
-                        n_random=req0.n_random, seed=req0.seed)
-                    fin = (lambda r=results: r)
+                    if hasattr(be, "hill_climb_ensemble_many_async"):
+                        fin = be.hill_climb_ensemble_many_async(
+                            req0.fn, req0.cluster, pm, stats=gstats,
+                            n_random=req0.n_random, seed=req0.seed)
+                    else:
+                        results = be.hill_climb_ensemble_many(
+                            req0.fn, req0.cluster, pm, stats=gstats,
+                            n_random=req0.n_random, seed=req0.seed)
+                        fin = (lambda r=results: r)
+                if sp:
+                    sp.set(mode=mode, q=len(entries),
+                           backend=getattr(be, "name", "?"))
             for ex in entries:
                 self._bump(ex.req, "broker_batches")
             self.stats.broker_batches -= len(entries) - 1  # one per group
@@ -507,7 +643,10 @@ class PlanBroker:
 
         def finalize() -> None:
             for entries, gstats, fin in waves:
-                results = fin()
+                with _obs.span("broker.group.sync", cat="broker") as sp:
+                    results = fin()
+                    if sp:
+                        sp.set(q=len(entries))
                 # attribute the group's exploration evenly (grid groups
                 # are exactly grid_size per request; climb convergence
                 # varies per request, so the split is approximate there)
@@ -585,3 +724,5 @@ class PlanBroker:
         fut.value = (None if value[0] is None
                      else tuple(int(v) for v in value[0]), float(value[1]))
         fut.done = True
+        if fut.obs is not None:
+            _request_done(fut)

@@ -118,6 +118,7 @@ from __future__ import annotations
 
 import contextlib
 import math
+import time
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -125,6 +126,9 @@ import numpy as np
 from repro.analysis.registry import hot_path
 from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.plan_cache import snap_to_grid
+from repro.obs import get_tracer, record_program
+
+_obs = get_tracer()
 
 BatchCostFn = Callable[..., "np.ndarray"]
 Result = Tuple[Optional[Tuple[int, ...]], float]
@@ -483,8 +487,18 @@ class JaxPlanBackend:
         key = (kind, id(fn), cluster.dims, extra)
         hit = self._programs.get(key)
         if hit is not None and hit[0] is fn:
+            if _obs.enabled:
+                record_program(self.name, kind, reused=True)
             return hit[1]
+        t0 = time.perf_counter_ns() if _obs.enabled else 0
         prog = build()
+        if _obs.enabled:
+            # compile-event capture: which program was built, how long
+            # the build (tracing + jit wrapping; XLA compiles lazily at
+            # first dispatch) took, on how many plan-mesh devices —
+            # cross-checkable against the plan-lint recompile audit
+            record_program(self.name, kind, reused=False, start_ns=t0,
+                           devices=self.device_count())
         # bounded cache on the process-wide singleton: evict oldest first
         # so callers that churn fresh fn closures cannot grow it without
         # limit (reusing one fn object per cost surface stays the fast

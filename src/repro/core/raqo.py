@@ -39,6 +39,9 @@ from repro.core.plans import IMPLS, OperatorCosting, PlanNode, has_edge, leaf
 from repro.core.schema import Schema
 from repro.core.selinger import (SelingerSession, drive_lockstep,
                                  selinger_plan)
+from repro.obs import get_tracer
+
+_obs = get_tracer()
 
 
 @dataclasses.dataclass
@@ -173,6 +176,9 @@ class RAQO:
             else PlanBroker(backend=self.backend)
         costings = [self._costing(objective, broker=broker)
                     for _ in queries]
+        _obs.instant("raqo.plan_queries", cat="driver",
+                     queries=len(queries), lockstep=lockstep,
+                     planner=self.planner)
         if not lockstep:
             for tables, costing in zip(queries, costings):
                 leaves = {t: leaf(self.schema, t) for t in tables}
@@ -202,7 +208,14 @@ class RAQO:
                         for tables, costing in zip(queries, costings)]
             drive_fast_randomized(sessions, broker)
             plans = [s.result()[0] for s in sessions]
-        return [self._wrap(p, t0, c) for p, c in zip(plans, costings)]
+        out = [self._wrap(p, t0, c) for p, c in zip(plans, costings)]
+        if _obs.enabled:
+            for i, jp in enumerate(out):
+                _obs.instant("raqo.query", cat="driver", query=i,
+                             requests=jp.stats.broker_requests,
+                             dedup=jp.stats.broker_dedup_hits,
+                             explored=jp.stats.configs_explored)
+        return out
 
     def _prefetch_base(self, queries: Sequence[Sequence[str]],
                        costings: Sequence[OperatorCosting]) -> None:

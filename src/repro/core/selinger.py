@@ -66,6 +66,9 @@ from repro.analysis.registry import hot_path
 from repro.core.plans import (IMPLS, OperatorCosting, PlanNode, has_edge,
                               join_cardinality, leaf)
 from repro.core.schema import Schema
+from repro.obs import get_tracer
+
+_obs = get_tracer()
 
 
 def _queue_level(schema: Schema, tables: Sequence[str],
@@ -265,21 +268,32 @@ def drive_lockstep(sessions: Sequence[SelingerSession],
         return
     pipelined = broker is not None and hasattr(broker, "flush_async")
     if pipelined:
-        for s in live:
-            s.queue_level(2)
+        with _obs.span("lockstep.queue", cat="driver") as sp:
+            for s in live:
+                s.queue_level(2)
+            if sp:
+                sp.set(level=2, queries=len(live))
         broker.flush_async()                # dispatch every query's level 2
     size = 2
     while live:
         if pipelined:
-            for s in live:
-                s.queue_level(size + 1)
+            # this enumeration runs while the previous wave's programs
+            # execute — its span lands inside that wave's async interval
+            with _obs.span("lockstep.queue", cat="driver") as sp:
+                for s in live:
+                    s.queue_level(size + 1)
+                if sp:
+                    sp.set(level=size + 1, queries=len(live))
             broker.flush_async()            # commit L, dispatch L+1
         elif broker is not None:
             for s in live:
                 s.prefetch_level_resolved(size)
             broker.flush()                  # one wave for the whole level
-        for s in live:
-            s.consume_level(size)
+        with _obs.span("lockstep.consume", cat="driver") as sp:
+            for s in live:
+                s.consume_level(size)
+            if sp:
+                sp.set(level=size, queries=len(live))
         live = [s for s in live if not s.done]
         size += 1
 

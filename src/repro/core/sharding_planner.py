@@ -48,6 +48,9 @@ from repro.core.plan_cache import ResourcePlanCache
 from repro.core.planning_backend import PlanBackend, get_backend
 from repro.core.roofline import (HW, Resources, RooflineTerms, chip_seconds,
                                  terms_for, terms_grid)
+from repro.obs import get_tracer
+
+_obs = get_tracer()
 
 
 def _pows2(lo: int, hi: int) -> Tuple[int, ...]:
@@ -240,19 +243,23 @@ class ShardingPlanner:
         n_random = self.ensemble_starts \
             if self.resource_planning == "ensemble" else 0
         futs = []
-        for choice in self._applicable_choices(cfg, shape):
-            model_id = f"{shape.kind}:{sorted(choice.items())}"
-            scalar_fn = self._cost_fn(cfg, shape, choice, chip_budget)
-            fallback = None if getattr(backend, "exact", False) else \
-                self._grid_fn(cfg, shape, choice, get_backend("numpy"))
-            req = PlanRequest(
-                fn=self._grid_fn(cfg, shape, choice, backend), cluster=dims,
-                params=params, commit_fn=scalar_fn, mode=mode,
-                n_random=n_random, seed=self.seed,
-                scan_fallback=(mode == "ensemble"), fallback_fn=fallback,
-                cache=self.cache, cache_key=(model_id, cfg.family, key),
-                validate_hit=True, stats=stats)
-            futs.append((choice, scalar_fn, broker.submit(req)))
+        with _obs.span("sharding.joint.submit", cat="driver") as sp:
+            for choice in self._applicable_choices(cfg, shape):
+                model_id = f"{shape.kind}:{sorted(choice.items())}"
+                scalar_fn = self._cost_fn(cfg, shape, choice, chip_budget)
+                fallback = None if getattr(backend, "exact", False) else \
+                    self._grid_fn(cfg, shape, choice, get_backend("numpy"))
+                req = PlanRequest(
+                    fn=self._grid_fn(cfg, shape, choice, backend),
+                    cluster=dims,
+                    params=params, commit_fn=scalar_fn, mode=mode,
+                    n_random=n_random, seed=self.seed,
+                    scan_fallback=(mode == "ensemble"), fallback_fn=fallback,
+                    cache=self.cache, cache_key=(model_id, cfg.family, key),
+                    validate_hit=True, stats=stats)
+                futs.append((choice, scalar_fn, broker.submit(req)))
+            if sp:
+                sp.set(shape=shape.name, choices=len(futs))
         best = None
         for choice, scalar_fn, fut in futs:
             res, cost = fut.result()

@@ -85,6 +85,9 @@ from repro.core.cluster import ClusterConditions, PlanningStats
 from repro.core.planning_backend import (  # noqa: F401 (re-exported types)
     DEFAULT_CHUNK, BatchCostFn, JaxPlanBackend, Result, _decode_flat,
     _neighbor_offsets, _pad_even, grid_arrays, start_indices)
+from repro.obs import get_tracer
+
+_obs = get_tracer()
 
 # int32 flat row ids: grids within one (padded) block of 2**31 configs
 # take the jax fallback path so tail-block ids never wrap negative
@@ -168,18 +171,24 @@ def _split_cost_fn(fn: BatchCostFn, n_rows: int, n_dims: int,
     from jax import core as jax_core
     cfgs_ex = jax.ShapeDtypeStruct((n_rows, n_dims), jnp.int32)
     p_ex = jax.ShapeDtypeStruct((p_width,), jnp.float32)
-    if has_params:
-        cj = jax.make_jaxpr(lambda c, p: fn(c, p))(cfgs_ex, p_ex)
+    # the jaxpr pre-trace is the kernel-build cost worth seeing in a
+    # trace: program assembly around it is cheap python
+    with _obs.span("pallas.pretrace", cat="compile") as sp:
+        if has_params:
+            cj = jax.make_jaxpr(lambda c, p: fn(c, p))(cfgs_ex, p_ex)
 
-        def call(cfgs, p, const_vals):
-            out, = jax_core.eval_jaxpr(cj.jaxpr, const_vals, cfgs, p)
-            return out.astype(jnp.float32)
-    else:
-        cj = jax.make_jaxpr(lambda c: fn(c))(cfgs_ex)
+            def call(cfgs, p, const_vals):
+                out, = jax_core.eval_jaxpr(cj.jaxpr, const_vals, cfgs, p)
+                return out.astype(jnp.float32)
+        else:
+            cj = jax.make_jaxpr(lambda c: fn(c))(cfgs_ex)
 
-        def call(cfgs, p, const_vals):
-            out, = jax_core.eval_jaxpr(cj.jaxpr, const_vals, cfgs)
-            return out.astype(jnp.float32)
+            def call(cfgs, p, const_vals):
+                out, = jax_core.eval_jaxpr(cj.jaxpr, const_vals, cfgs)
+                return out.astype(jnp.float32)
+        if sp:
+            sp.set(rows=n_rows, dims=n_dims,
+                   params=p_width if has_params else 0)
     ins, shapes = [], []
     for c in cj.consts:
         arr = jnp.asarray(c)

@@ -12,6 +12,9 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.analysis.registry import hot_path
+from repro.obs import get_tracer
+
+_obs = get_tracer()
 
 
 # --------------------------- jaxpr-lint fixtures --------------------------- #
@@ -114,6 +117,36 @@ def hot_host_tracked_decode(device_costs):
 def cold_loop_sync(values):
     """Not @hot_path: identical syncs must NOT be flagged here."""
     return [float(v) for v in values]
+
+
+@hot_path("fixture: traced hot loop — obs span/metric payload is "
+          "sync-free", folds=0)
+def hot_traced_clean(chunks, host_costs):
+    """GOLDEN: instrumented hot path that must lint CLEAN with zero
+    pragmas.  Every would-be host-sync pattern below (float() in a loop,
+    span kwargs) sits inside obs calls — attribution payload on host
+    values, exempt by the obs rule — and the folds=0 budget asserts the
+    visitor counted no depth-zero syncs either."""
+    total = 0
+    for i, c in enumerate(chunks):
+        with _obs.span("chunk", cat="fixture") as sp:
+            total += c
+            if sp:
+                sp.set(index=i, cost=float(host_costs[i]))
+        _obs.instant("tick", value=float(host_costs[i]))
+    _obs.complete("done", 0, total=float(total))
+    return total
+
+
+@hot_path("fixture: obs exemption must not leak past the obs call")
+def hot_traced_still_syncs(chunks):
+    """The loop float() OUTSIDE any obs call must still warn even though
+    the function also traces."""
+    out = []
+    for c in chunks:
+        _obs.instant("tick")
+        out.append(float(c))
+    return out
 
 
 # reason-less pragma below: must surface as pragma-no-reason

@@ -168,6 +168,23 @@ def test_host_tracked_decode_stays_in_budget(hot_findings):
     assert "asarray" in f.message
 
 
+def test_traced_hot_path_lints_clean(hot_findings):
+    """Obs span/metric payloads are sync-free: a hot loop whose only
+    float() decodes sit inside ``_obs`` calls yields zero findings, and
+    the folds=0 budget proves pass 3 counted no syncs at all."""
+    assert not [f for f in hot_findings if f.obj == "hot_traced_clean"]
+
+
+def test_obs_exemption_does_not_leak(hot_findings):
+    """A float() in the same loop as an ``_obs.instant`` call — but
+    outside any obs call — must still warn."""
+    line = fixture_line("out.append(float(c))")
+    f = only([f for f in hot_findings
+              if f.obj == "hot_traced_still_syncs"])
+    assert (f.rule, f.severity, f.line) == ("host-sync", "warn", line)
+    assert not f.allowed
+
+
 def test_reasonless_pragma_flagged(hot_findings):
     line = fixture_line("# plan-lint: allow(host-sync)", exact=True)
     f = only([f for f in hot_findings if f.rule == "pragma-no-reason"])
