@@ -21,7 +21,9 @@ table across runs/PRs — every numeric snapshot key is trended
 automatically, so the ``lockstep_*`` cross-query planning keys ride
 along with no changes here.  A "## telemetry" section summarizes the
 latest traced run (request p50/p99 and the wave
-assembly/execute/commit split).
+assembly/execute/commit split), and a "## streaming" section the latest
+streaming-service run (plans/sec and submit->resolve p50/p99 from
+benchmarks/streaming_bench — the CI latency gate's numbers).
 """
 from __future__ import annotations
 
@@ -126,6 +128,43 @@ def _telemetry_summary(sources: list) -> dict:
     return {}
 
 
+def _streaming_summary(sources: list) -> dict:
+    """Latest streaming-service digest: plans/sec and submit->resolve
+    p50/p99 at smoke and full concurrency.  Prefers the fresh artifact
+    (artifacts/streaming_summary.json, written by every
+    streaming_bench run); falls back to the last snapshot in the
+    tracked BENCH_streaming.json history (same pattern as
+    ``_telemetry_summary``)."""
+    keep = ("smoke_numpy_p50_s", "smoke_numpy_p99_s",
+            "smoke_numpy_plans_per_s", "smoke_jax_p99_s",
+            "closed_numpy_plans_per_s", "closed_numpy_p50_s",
+            "closed_numpy_p99_s", "closed_jax_plans_per_s",
+            "closed_jax_p99_s", "closed_concurrency",
+            "open_jax_p99_s", "traced_request_p99_s", "traced_requests")
+    artifact = ROOT / "artifacts" / "streaming_summary.json"
+    if artifact.exists():
+        try:
+            data = json.loads(artifact.read_text())
+            sources.append("artifacts/streaming_summary.json")
+            out = {k: data.get(k) for k in keep if data.get(k) is not None}
+            out["source"] = "artifacts/streaming_summary.json"
+            return out
+        except (json.JSONDecodeError, TypeError):
+            pass
+    tracked = ROOT / "BENCH_streaming.json"
+    if tracked.exists():
+        try:
+            snap = (json.loads(tracked.read_text()).get("history")
+                    or [{}])[-1]
+            out = {k: snap.get(k) for k in keep if snap.get(k) is not None}
+            out["source"] = "BENCH_streaming.json (last snapshot)"
+            return out
+        except (json.JSONDecodeError, TypeError, IndexError,
+                AttributeError):
+            pass
+    return {}
+
+
 def report() -> None:
     """Merge BENCH_*.json + artifacts/bench_results.json into one
     markdown/JSON trend table (the cross-PR perf trajectory)."""
@@ -168,13 +207,15 @@ def report() -> None:
 
     lint = _lint_summary(sources)
     telemetry = _telemetry_summary(sources)
+    streaming = _streaming_summary(sources)
 
     payload = {"generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
                "sources": sources,
                "metrics": [{"name": n, "value": v} for n, v in metrics],
                "trends": trends,
                "plan_lint": lint,
-               "telemetry": telemetry}
+               "telemetry": telemetry,
+               "streaming": streaming}
     out_dir = ROOT / "artifacts"
     out_dir.mkdir(exist_ok=True)
     (out_dir / "bench_report.json").write_text(
@@ -208,6 +249,12 @@ def report() -> None:
                "| metric | value |", "|---|---|"]
         md += [f"| {k} | {'' if v is None else format(v, '.6g')} |"
                for k, v in telemetry.items()]
+    if streaming:
+        md += ["", "## streaming", "",
+               f"Source: {streaming.pop('source', 'n/a')}", "",
+               "| metric | value |", "|---|---|"]
+        md += [f"| {k} | {'' if v is None else format(v, '.6g')} |"
+               for k, v in streaming.items()]
     (out_dir / "bench_report.md").write_text("\n".join(md) + "\n")
     print(f"wrote {out_dir / 'bench_report.json'} and .md "
           f"({len(metrics)} metrics, {len(trends)} trend series)")

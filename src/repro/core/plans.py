@@ -329,6 +329,13 @@ class OperatorCosting:
         wrapper = self._pending.get((impl, ss, ls, self.objective))
         return None if wrapper is None else wrapper._fut
 
+    def pending_futures(self) -> list:
+        """Raw broker futures of every in-flight prefetch of this costing
+        (read-only peek).  The streaming planner service samples their
+        ``PlanFuture.critical_path()`` after each wave instead of growing
+        its own per-request timers."""
+        return [w._fut for w in self._pending.values()]
+
     def adopt_future(self, impl: str, ss: float, ls: float, fut) -> None:
         """Adopt a sibling costing's broker future as this operator's
         pending prefetch.  The broker resolves one search; each adopter

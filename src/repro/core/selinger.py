@@ -56,6 +56,19 @@ Queries retire ragged: a k-way join leaves the lockstep at level k,
 single-table and empty queries short-circuit at construction, and a
 disconnected query's cross-join fallback runs inside its final consume
 (synchronously — one lost overlap step, same submission order).
+
+ADMISSION (``LockstepDriver``, used by the streaming planner service in
+repro.service): the same argument extends to queries that JOIN a running
+lockstep mid-flight.  A newly admitted session starts at level 2 while
+the incumbents continue at their own levels, so a single wave stacks
+mixed levels — session A's level-5 candidates next to session B's
+level-2 — and because every session's level-L requests are pure
+functions of its own table sets, queued in the same per-query order its
+solo run would queue them, each admitted query's plan is bit-identical
+to planning it alone on a fresh broker.  Within-wave cross-query
+duplicates take the same per-request replay / leader-follower collapse
+as the static batch; only *which* query's stats record a given hit may
+differ, never any value.
 """
 from __future__ import annotations
 
@@ -250,8 +263,108 @@ def selinger_plan(schema: Schema, tables: Sequence[str],
     return sess.result
 
 
-@hot_path("advances every concurrent query's DP one level per flush wave",
-          folds=1)
+class _Slot:
+    """One session's position in a running lockstep.  ``inflight`` is
+    the DP level whose requests the most recent flush dispatched (None
+    until the session's first wave); it is consumed one flush later,
+    when that wave commits."""
+
+    __slots__ = ("session", "inflight")
+
+    def __init__(self, session: SelingerSession):
+        self.session = session
+        self.inflight: Optional[int] = None
+
+
+class LockstepDriver:
+    """Admission-capable lockstep: advance any mix of in-flight Selinger
+    sessions one DP level per shared flush wave, admitting new sessions
+    between waves.
+
+    Each ``step()`` queues, for every live slot, the level after the one
+    currently in flight (level 2 for a freshly admitted slot), issues
+    ONE shared ``flush_async`` — which commits every slot's in-flight
+    wave and dispatches the just-queued one — then consumes the
+    now-committed levels and retires finished sessions.  A static batch
+    admitted up front and ``drain()``-ed reproduces the historical
+    ``drive_lockstep`` broker-op sequence exactly (queue 2 / flush,
+    then queue L+1 / flush / consume L per wave); mid-run admissions
+    simply stack their lower levels into the same waves the incumbents
+    were going to flush anyway (module docstring: ADMISSION).
+
+    Against a single-buffered broker (no ``flush_async``) each step
+    runs the legacy resolved-prefetch path: queue from resolved plans,
+    ``flush()``, consume the same level in one step.  With no broker at
+    all, consume costs synchronously.
+    """
+
+    def __init__(self, broker):
+        self.broker = broker
+        self.pipelined = broker is not None and hasattr(broker,
+                                                        "flush_async")
+        self._slots: list = []
+
+    def admit(self, session: SelingerSession) -> None:
+        """Join the lockstep at the next wave.  Trivial sessions (done
+        at construction) never occupy a slot."""
+        if not session.done:
+            self._slots.append(_Slot(session))
+
+    @property
+    def live(self) -> int:
+        return len(self._slots)
+
+    @hot_path("advances every live query's DP one level per flush wave; "
+              "mid-run admissions join at level 2", folds=1)
+    def step(self) -> None:
+        """One shared wave: queue each slot's next level, flush, consume
+        each slot's committed level, retire finished sessions."""
+        if not self._slots:
+            return
+        if self.pipelined:
+            # this enumeration runs while the previous wave's programs
+            # execute — its span lands inside that wave's async interval
+            with _obs.span("lockstep.queue", cat="driver") as sp:
+                qmax = 0
+                for slot in self._slots:
+                    q = 2 if slot.inflight is None else slot.inflight + 1
+                    slot.session.queue_level(q)
+                    qmax = max(qmax, q)
+                if sp:
+                    sp.set(level=qmax, queries=len(self._slots))
+            self.broker.flush_async()       # commit in-flight, dispatch
+            ready = [s for s in self._slots if s.inflight is not None]
+            if ready:
+                with _obs.span("lockstep.consume", cat="driver") as sp:
+                    for slot in ready:
+                        slot.session.consume_level(slot.inflight)
+                    if sp:
+                        sp.set(level=max(s.inflight for s in ready),
+                               queries=len(ready))
+            for slot in self._slots:
+                slot.inflight = (2 if slot.inflight is None
+                                 else slot.inflight + 1)
+        else:
+            for slot in self._slots:
+                q = 2 if slot.inflight is None else slot.inflight + 1
+                slot.session.prefetch_level_resolved(q)
+                slot.inflight = q
+            if self.broker is not None:
+                self.broker.flush()         # one wave for every level
+            with _obs.span("lockstep.consume", cat="driver") as sp:
+                for slot in self._slots:
+                    slot.session.consume_level(slot.inflight)
+                if sp:
+                    sp.set(level=max(s.inflight for s in self._slots),
+                           queries=len(self._slots))
+        self._slots = [s for s in self._slots if not s.session.done]
+
+    def drain(self) -> None:
+        """Run waves (no further admissions) until every slot retires."""
+        while self._slots:
+            self.step()
+
+
 def drive_lockstep(sessions: Sequence[SelingerSession],
                    broker) -> None:
     """Advance many Selinger sessions in lockstep against one shared
@@ -260,42 +373,14 @@ def drive_lockstep(sessions: Sequence[SelingerSession],
     flush, so each wave is a single stacked (ΣQ_L, P) program per
     (cost-fn, grid) group instead of Q small ones.  Ragged by design:
     a session past its last level no-ops its queue/consume calls and
-    drops out of ``live``.  Plans, cache contents/counters, and broker
-    traffic are bit-identical to driving each session alone (module
-    docstring)."""
-    live = [s for s in sessions if not s.done]
-    if not live:
-        return
-    pipelined = broker is not None and hasattr(broker, "flush_async")
-    if pipelined:
-        with _obs.span("lockstep.queue", cat="driver") as sp:
-            for s in live:
-                s.queue_level(2)
-            if sp:
-                sp.set(level=2, queries=len(live))
-        broker.flush_async()                # dispatch every query's level 2
-    size = 2
-    while live:
-        if pipelined:
-            # this enumeration runs while the previous wave's programs
-            # execute — its span lands inside that wave's async interval
-            with _obs.span("lockstep.queue", cat="driver") as sp:
-                for s in live:
-                    s.queue_level(size + 1)
-                if sp:
-                    sp.set(level=size + 1, queries=len(live))
-            broker.flush_async()            # commit L, dispatch L+1
-        elif broker is not None:
-            for s in live:
-                s.prefetch_level_resolved(size)
-            broker.flush()                  # one wave for the whole level
-        with _obs.span("lockstep.consume", cat="driver") as sp:
-            for s in live:
-                s.consume_level(size)
-            if sp:
-                sp.set(level=size, queries=len(live))
-        live = [s for s in live if not s.done]
-        size += 1
+    drops out of the live set.  Plans, cache contents/counters, and
+    broker traffic are bit-identical to driving each session alone
+    (module docstring).  Static-batch front-end over ``LockstepDriver``
+    — the streaming service admits into a live driver instead."""
+    driver = LockstepDriver(broker)
+    for s in sessions:
+        driver.admit(s)
+    driver.drain()
 
 
 def exhaustive_left_deep(schema: Schema, tables: Sequence[str],

@@ -1,0 +1,9 @@
+"""Streaming planner service: live arrival traffic over one session
+broker (see README.md in this package and repro/core/selinger.py's
+ADMISSION docstring section)."""
+from repro.service.admission import (QueryTicket, StreamingPlannerService)
+from repro.service.traces import (Arrival, bursty_trace, diurnal_trace,
+                                  poisson_trace)
+
+__all__ = ["Arrival", "QueryTicket", "StreamingPlannerService",
+           "bursty_trace", "diurnal_trace", "poisson_trace"]

@@ -149,6 +149,26 @@ def hot_traced_still_syncs(chunks):
     return out
 
 
+@hot_path("fixture: admission loop — per-ticket obs payloads are "
+          "sync-free, one wave readback inside the budget", folds=1)
+def hot_admission_loop(arrivals, wave_costs):
+    """GOLDEN: the streaming service's admission-loop shape
+    (repro.service.admission ``StreamingPlannerService.step``): per
+    admitted ticket the loop does host bookkeeping plus obs stamps
+    (exempt), and the wave itself pays exactly ONE depth-zero host
+    readback — which the folds=1 budget covers.  Must lint to the
+    single host-sync info and nothing else."""
+    admitted = 0
+    for a in arrivals:
+        _obs.instant("service.submit", tenant=a,
+                     latency_us=float(wave_costs[a]))
+        admitted += 1
+    wave = np.asarray(wave_costs)       # the wave's single host sync
+    _obs.complete("service.wave", 0, admitted=admitted,
+                  total=float(wave.sum()))
+    return admitted
+
+
 # reason-less pragma below: must surface as pragma-no-reason
 # plan-lint: allow(host-sync)
 _PRAGMA_NO_REASON_LINE_MARKER = True

@@ -185,6 +185,18 @@ def test_obs_exemption_does_not_leak(hot_findings):
     assert not f.allowed
 
 
+def test_admission_loop_fixture_in_budget(hot_findings):
+    """The streaming service's admission-loop shape: per-ticket obs
+    payloads inside the loop are exempt, and the wave's single host
+    readback fits the folds=1 budget — exactly one host-sync info, no
+    warn and no sync-budget finding."""
+    fs = [f for f in hot_findings if f.obj == "hot_admission_loop"]
+    f = only(fs)
+    assert (f.rule, f.severity) == ("host-sync", "info")
+    assert f.line == fixture_line("wave = np.asarray(wave_costs)")
+    assert not f.allowed
+
+
 def test_reasonless_pragma_flagged(hot_findings):
     line = fixture_line("# plan-lint: allow(host-sync)", exact=True)
     f = only([f for f in hot_findings if f.rule == "pragma-no-reason"])

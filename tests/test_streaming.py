@@ -1,0 +1,354 @@
+"""Streaming planner service (repro.service): admission-join identity
+and edge cases.
+
+The load-bearing contract: a query admitted into a RUNNING lockstep —
+joining at DP level 2 while incumbents continue at their own levels —
+must produce a plan BIT-IDENTICAL to planning the same query solo on a
+fresh broker (selinger.py's ADMISSION docstring section).  Tested via
+hypothesis over random schemas/staggered admissions on numpy, on the CI
+matrix lane's backend, and in an 8-simulated-device jax subprocess;
+edge cases cover arrival at an incumbent's final wave, single-table
+queries joining mid-run, arrival while a ``flush_async`` wave is still
+in flight, empty traces / zero admissions, and the legacy
+(non-double-buffered) broker branch.  Trace generators must be pure
+functions of their seed.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import paper_cluster
+from repro.core.plan_broker import PlanBroker
+from repro.core.plan_cache import ResourcePlanCache
+from repro.core.raqo import RAQO
+from repro.core.schema import random_query, random_schema
+from repro.obs import get_metrics, get_tracer
+from repro.service import (StreamingPlannerService, bursty_trace,
+                           diurnal_trace, poisson_trace)
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _raqo(schema, *, cache=None, backend=None):
+    return RAQO(schema, cluster=paper_cluster(24, 8),
+                resource_planning="batched", cache=cache, backend=backend,
+                broker=PlanBroker(backend))
+
+
+def _tree_sig(p):
+    if p is None:
+        return None
+    if p.is_leaf:
+        return tuple(sorted(p.tables))
+    return (p.impl, p.resources, p.op_cost, p.total_cost,
+            _tree_sig(p.left), _tree_sig(p.right))
+
+
+def _assert_solo_identical(tickets, schema, backend=None):
+    for t in tickets:
+        solo = _raqo(schema, backend=backend).joint(t.tables)
+        assert _tree_sig(solo.plan) == _tree_sig(t.joint.plan), t.tables
+        assert (solo.exec_time, solo.money) == \
+            (t.joint.exec_time, t.joint.money)
+
+
+# ----------------------- trace generators ---------------------------------- #
+
+def test_trace_generators_deterministic_and_sorted():
+    schema = random_schema(10, seed=1)
+    for gen in (poisson_trace, bursty_trace, diurnal_trace):
+        a = gen(schema, 40, rate=5.0, seed=9, tenants=4)
+        b = gen(schema, 40, rate=5.0, seed=9, tenants=4)
+        assert a == b, gen.__name__            # pure function of the seed
+        assert len(a) == 40
+        assert all(x.t <= y.t for x, y in zip(a, a[1:]))
+        assert all(0 <= x.tenant < 4 for x in a)
+        assert all(2 <= len(x.tables) <= 6 for x in a)
+        c = gen(schema, 40, rate=5.0, seed=10, tenants=4)
+        assert c != a                          # seed actually matters
+
+    burst = bursty_trace(schema, 32, rate=8.0, seed=0, burst=8)
+    times = [x.t for x in burst]
+    assert len(set(times)) == 4                # 4 bursts of 8
+    with pytest.raises(ValueError):
+        diurnal_trace(schema, 4, rate=1.0, swing=1.5)
+
+
+# ----------------------- admission-join identity --------------------------- #
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_hypothesis_admission_join_matches_solo(seed):
+    """Random schemas, ragged query sizes (1..5), admissions staggered
+    across waves: every ticket's plan bit-equals the fresh-broker solo
+    plan of the same query."""
+    rng = np.random.default_rng(seed)
+    schema = random_schema(8, seed=seed % 100)
+    svc = StreamingPlannerService(_raqo(schema))
+    tickets = []
+    for i in range(5):
+        k = int(rng.integers(1, 6))
+        tickets.append(svc.submit(random_query(schema, k, seed=seed + i),
+                                  tenant=i))
+        if rng.integers(0, 2):
+            svc.step()                # interleave admissions with waves
+    svc.drain()
+    assert all(t.done for t in tickets)
+    _assert_solo_identical(tickets, schema)
+
+
+def test_admission_identical_on_lane_backend(plan_backend,
+                                             plan_backend_name):
+    """The CI matrix lane's backend plans admitted queries identically
+    to solo — argmin-identical search makes this exact everywhere."""
+    schema = random_schema(8, seed=6)
+    svc = StreamingPlannerService(_raqo(schema,
+                                        backend=plan_backend_name))
+    tickets = [svc.submit(random_query(schema, 4, seed=0), tenant=0)]
+    svc.step()
+    svc.step()
+    tickets.append(svc.submit(random_query(schema, 3, seed=1), tenant=1))
+    svc.drain()
+    _assert_solo_identical(tickets, schema, backend=plan_backend_name)
+    assert svc.broker.counters_snapshot()["waves"] > 0
+
+
+# ----------------------------- edge cases ---------------------------------- #
+
+def test_arrival_at_final_wave():
+    """A query admitted just before an incumbent's LAST wave: the shared
+    flush commits the incumbent's final level and dispatches the
+    newcomer's level 2; both plans stay solo-identical."""
+    schema = random_schema(8, seed=11)
+    svc = StreamingPlannerService(_raqo(schema))
+    q_inc = random_query(schema, 4, seed=2)     # finishes at step 4
+    inc = svc.submit(q_inc, tenant=0)
+    for _ in range(3):
+        svc.step()
+    assert not inc.done                         # level 4 in flight
+    late = svc.submit(random_query(schema, 3, seed=3), tenant=1)
+    svc.step()                                  # incumbent's final wave
+    assert inc.done and inc.final_wave == 4
+    assert not late.done
+    svc.drain()
+    assert late.done and late.admit_wave == 3
+    _assert_solo_identical([inc, late], schema)
+
+
+def test_single_table_query_joins_mid_run():
+    """Trivial queries resolve at submit — no wave ride — and leave the
+    running incumbents untouched."""
+    schema = random_schema(8, seed=12)
+    svc = StreamingPlannerService(_raqo(schema))
+    inc = svc.submit(random_query(schema, 5, seed=4), tenant=0)
+    svc.step()
+    waves_before = svc.waves
+    one = svc.submit(random_query(schema, 1, seed=5), tenant=1)
+    assert one.done and one.latency_s is not None
+    assert one.joint.plan.is_leaf
+    assert tuple(one.joint.plan.tables) == tuple(one.tables)
+    assert svc.waves == waves_before            # no wave consumed
+    svc.drain()
+    _assert_solo_identical([inc, one], schema)
+
+
+def test_arrival_during_inflight_commit():
+    """Submission while a flush_async wave is still IN FLIGHT (dispatched,
+    uncommitted): the newcomer's level 2 rides the next flush, which
+    commits the incumbent wave first — identity intact."""
+    schema = random_schema(8, seed=13)
+    svc = StreamingPlannerService(_raqo(schema))
+    inc = svc.submit(random_query(schema, 5, seed=6), tenant=0)
+    svc.step()
+    assert svc.broker.inflight_count() > 0      # wave uncommitted
+    late = svc.submit(random_query(schema, 4, seed=7), tenant=1)
+    svc.drain()
+    assert inc.done and late.done
+    _assert_solo_identical([inc, late], schema)
+
+
+def test_empty_trace_and_zero_admissions():
+    schema = random_schema(6, seed=14)
+    svc = StreamingPlannerService(_raqo(schema))
+    assert svc.run_closed_loop([], concurrency=8) == []
+    assert svc.run_open_loop(()) == []
+    svc.drain()                                 # no-op on an idle service
+    rep = svc.report(elapsed_s=0.01)
+    assert rep["submitted"] == rep["completed"] == rep["waves"] == 0
+    assert rep["query_p99_s"] is None
+    with pytest.raises(ValueError):
+        svc.submit([], tenant=0)
+
+
+def test_closed_loop_respects_concurrency_and_reports():
+    schema = random_schema(10, seed=15)
+    trace = poisson_trace(schema, 24, rate=50.0, seed=3, tenants=6)
+    svc = StreamingPlannerService(_raqo(schema))
+    high_water = 0
+    orig_step = svc.step
+
+    def step():
+        nonlocal high_water
+        high_water = max(high_water, svc.active)
+        return orig_step()
+    svc.step = step
+    tickets = svc.run_closed_loop([(a.tenant, a.tables) for a in trace],
+                                  concurrency=6)
+    assert len(tickets) == 24
+    assert all(t.done and t.joint.plan is not None for t in tickets)
+    assert all(t.final_wave >= t.admit_wave for t in tickets)
+    assert high_water <= 6
+    rep = svc.report(elapsed_s=1.0)
+    assert rep["completed"] == 24
+    assert rep["plans_per_s"] == 24.0
+    assert rep["query_p50_s"] <= rep["query_p99_s"]
+    # broker waves count flushes that dispatched work; service waves also
+    # count commit-only steps (the pipelined driver's drain tail)
+    assert 1 <= rep["broker"]["waves"] <= svc.waves
+
+
+def test_admission_on_legacy_broker():
+    """A broker without flush_async drives the driver's one-level-per-
+    step fallback; admissions still join mid-run, identity holds."""
+    class _LegacyBroker(PlanBroker):
+        flush_async = property()
+
+    schema = random_schema(8, seed=16)
+    raqo = RAQO(schema, cluster=paper_cluster(24, 8),
+                resource_planning="batched", broker=_LegacyBroker("numpy"))
+    svc = StreamingPlannerService(raqo)
+    a = svc.submit(random_query(schema, 4, seed=8), tenant=0)
+    svc.step()
+    b = svc.submit(random_query(schema, 3, seed=9), tenant=1)
+    svc.drain()
+    assert a.done and b.done
+    _assert_solo_identical([a, b], schema)
+
+
+def test_shared_cache_stream_completes():
+    """With a shared exact resource-plan cache the stream still plans
+    every query (values flow through cache hits instead of searches);
+    plan equality across recurring identical queries is exact."""
+    schema = random_schema(8, seed=17)
+    q = random_query(schema, 4, seed=10)
+    svc = StreamingPlannerService(
+        _raqo(schema, cache=ResourcePlanCache("exact")))
+    first = svc.submit(q, tenant=0)
+    svc.step()
+    second = svc.submit(q, tenant=1)            # recurring job mid-run
+    svc.drain()
+    assert _tree_sig(first.joint.plan) == _tree_sig(second.joint.plan)
+
+
+def test_tracing_never_perturbs_streaming_plans():
+    """Tracing off vs on: identical plans and broker counters; the
+    traced run feeds service.query_s and records critical-path
+    samples."""
+    schema = random_schema(8, seed=18)
+    trace = poisson_trace(schema, 10, rate=50.0, seed=4, tenants=3)
+    work = [(a.tenant, a.tables) for a in trace]
+
+    def run():
+        svc = StreamingPlannerService(_raqo(schema))
+        tickets = svc.run_closed_loop(work, concurrency=4)
+        return [_tree_sig(t.joint.plan) for t in tickets], \
+            svc.broker.counters_snapshot(), svc
+
+    tr, mx = get_tracer(), get_metrics()
+    was = tr.enabled
+    sig_off, cnt_off, _ = run()
+    tr.reset()
+    mx.reset()
+    tr.enable()
+    try:
+        sig_on, cnt_on, svc = run()
+        assert sig_on == sig_off
+        assert cnt_on == cnt_off
+        h = mx.histogram("service.query_s")
+        assert h.count == len(work)
+        rep = svc.report(elapsed_s=1.0)
+        assert rep["request"]["count"] > 0
+        assert rep["critical_path"]["samples"] > 0
+    finally:
+        tr.enabled = was
+        tr.reset()
+        mx.reset()
+
+
+# -------------------- 8-simulated-device subprocess lane -------------------- #
+
+_STREAM_DRIVER = """
+import json, sys
+import jax
+from repro.core.cluster import paper_cluster
+from repro.core.plan_broker import PlanBroker
+from repro.core.raqo import RAQO
+from repro.core.schema import random_query, random_schema
+from repro.service import StreamingPlannerService
+
+want = int(sys.argv[1])
+assert jax.device_count() == want, (jax.device_count(), want)
+schema = random_schema(8, seed=3)
+
+
+def raqo():
+    return RAQO(schema, cluster=paper_cluster(24, 8), backend="jax",
+                resource_planning="batched", broker=PlanBroker("jax"))
+
+
+def sig(p):
+    if p is None:
+        return None
+    if p.is_leaf:
+        return sorted(p.tables)
+    return [p.impl, list(p.resources), p.op_cost, p.total_cost,
+            sig(p.left), sig(p.right)]
+
+
+svc = StreamingPlannerService(raqo())
+queries = [random_query(schema, k, seed=q)
+           for q, k in enumerate((5, 3, 1, 4, 5))]
+tickets = []
+for i, q in enumerate(queries):
+    tickets.append(svc.submit(q, tenant=i))
+    if i % 2 == 0:
+        svc.step()
+svc.drain()
+ok = all(sig(raqo().joint(t.tables).plan) == sig(t.joint.plan)
+         for t in tickets)
+print(json.dumps({"devices": jax.device_count(), "ok": ok,
+                  "completed": sum(t.done for t in tickets),
+                  "waves": svc.waves}))
+"""
+
+
+@needs_jax
+def test_streaming_admission_at_8_simulated_devices():
+    """Device-sharded lane: staggered admissions on 8 simulated XLA
+    devices still plan solo-identically."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("REPRO_PLAN_DEVICES", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _STREAM_DRIVER, "8"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.splitlines()[-1])
+    assert out["devices"] == 8
+    assert out["ok"], out
+    assert out["completed"] == 5
